@@ -1,0 +1,111 @@
+"""Regenerate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+results/dryrun/*.json artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.experiments_report > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results", "dryrun"
+)
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "xlstm-350m", "phi3.5-moe-42b-a6.6b", "llama4-scout-17b-a16e",
+    "granite-20b", "qwen2-1.5b", "gemma3-27b", "qwen2.5-14b",
+    "llava-next-34b", "whisper-medium", "zamba2-1.2b",
+]
+
+
+def load():
+    recs = {}
+    for f in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        recs[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f} MB"
+    return f"{b/1e3:.0f} kB"
+
+
+def dryrun_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | chips | compile s | HLO GFLOP/dev | coll GB/dev | "
+        "bytes/dev (arg+tmp+out) | status |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | SKIP (long-context rule) |")
+                continue
+            rf = r["roofline"]
+            mem = r["detail"]["memory_analysis"]
+            bpd = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0)
+                   - mem.get("alias_size_in_bytes", 0))
+            fits = "OK" if bpd <= 16 * 1024**3 else "OVER-HBM"
+            lines.append(
+                f"| {arch} | {shape} | {r['chips']} | {r['compile_s']:.0f} | "
+                f"{rf['hlo_flops']/1e9:.0f} | "
+                f"{rf['collective_bytes']/1e9:.2f} | {fmt_bytes(bpd)} | {fits} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "MODEL_GFLOP/dev | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            rf = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {rf['compute_s']:.2e} | "
+                f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+                f"**{rf['bound']}** | {rf['model_flops']/1e9:.1f} | "
+                f"{rf['useful_flops_ratio']:.2f} | {rf['roofline_fraction']:.3f} |"
+            )
+    return "\n".join(lines)
+
+
+def bounds_summary(recs):
+    counts = defaultdict(int)
+    for (a, s, m), r in recs.items():
+        if m == "single":
+            counts[r["roofline"]["bound"]] += 1
+    return dict(counts)
+
+
+def main():
+    recs = load()
+    print("## Dry-run table (single-pod 16x16)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n## Dry-run table (multi-pod 2x16x16)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n## Roofline table (single-pod)\n")
+    print(roofline_table(recs, "single"))
+    print("\nbounds:", bounds_summary(recs))
+
+
+if __name__ == "__main__":
+    main()

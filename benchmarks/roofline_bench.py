@@ -1,0 +1,40 @@
+"""Roofline benchmark: reads the dry-run artifacts (results/dryrun/*.json)
+and reports the three terms + bound per cell. Falls back to a note if the
+sweep has not been run yet."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "results", "dryrun")
+
+
+def roofline_bench() -> List[Row]:
+    rows: List[Row] = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline/missing", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun --all")]
+    for f in files:
+        t0 = time.perf_counter()
+        with open(f) as fh:
+            r = json.load(fh)
+        us = (time.perf_counter() - t0) * 1e6
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        rows.append((
+            f"roofline/{r['cell']}", us,
+            f"bound={rf['bound']};compute={rf['compute_s']:.2e}s;"
+            f"memory={rf['memory_s']:.2e}s;collective={rf['collective_s']:.2e}s;"
+            f"useful={rf['useful_flops_ratio']:.2f};"
+            f"roofline_frac={rf['roofline_fraction']:.3f}",
+        ))
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark harness (deliverable d): one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  table1/*    Table I    relative clock frequencies
+  fig1/*      Fig. 1     ideal scaling vs RIMA
+  table4/*    Table IV   reduction latency models
+  table5/*    Table V    PiCaSO-IM block utilization deltas
+  fig5/*      Fig. 5     100%-BRAM scalability across devices
+  table8/*    Table VIII system comparison / gold scores
+  fig7/*      Fig. 7     GEMV cycle latency + execution time
+  fig7sim/*   Fig. 7     cycle-accurate simulator validation
+  table9/*    Table IX   curve-fitted (a, b, c) + interpretations
+  kernel/*    TPU adaptation: bit-plane GEMV bandwidth amplification
+  reduction/* collective schedule byte models
+  roofline/*  per-cell roofline terms from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from .kernel_bench import kernel_bench, reduction_schedule_bench
+    from .paper_tables import (
+        fig1_scaling,
+        fig5_scalability,
+        fig7_gemv,
+        fig7_simulator_validation,
+        table1_frequency,
+        table4_reduction,
+        table5_utilization,
+        table8_systems,
+        table9_curvefit,
+    )
+    from .roofline_bench import roofline_bench
+
+    sections = [
+        table1_frequency, fig1_scaling, table4_reduction, table5_utilization,
+        fig5_scalability, table8_systems, fig7_gemv,
+        fig7_simulator_validation, table9_curvefit, kernel_bench,
+        reduction_schedule_bench, roofline_bench,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in sections:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness running; report at exit
+            failures += 1
+            print(f"{fn.__name__}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stdout)
+    if failures:
+        raise SystemExit(f"{failures} benchmark sections failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example (deliverable b): continuous-batching decode with
+PIM-resident (bit-plane quantized) weights — the paper's GEMV engine as a
+first-class serving feature.
+
+Compares dense vs 8-bit bit-serial (group=1) vs 8-bit slice4-style
+(group=2, Booth-radix-4 analogue) serving: same tokens, and the packed
+fraction / HBM-byte reduction that sets decode speed on the target TPU.
+
+Run:  PYTHONPATH=src python examples/serve_pim_gemv.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_lm
+from repro.models.transformer import count_params
+from repro.quant.bitplane import PimQuantConfig
+from repro.serve import ContinuousBatcher, Request, ServeConfig, ServeEngine
+
+
+def main():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    print(f"model: {cfg.name} (smoke), {count_params(params)/1e3:.0f}K params")
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab_size)
+
+    eng = ServeEngine(cfg, params, ServeConfig(max_cache_len=48, max_new_tokens=8))
+    dense = eng.generate(prompts)
+    print("dense tokens      :", dense[0].tolist())
+
+    for n_bits, group, tag in [(8, 1, "bit-serial r2"), (8, 2, "slice4 / r4")]:
+        e = ServeEngine(cfg, params, ServeConfig(max_cache_len=48, max_new_tokens=8))
+        frac = e.quantize(PimQuantConfig(n_bits=n_bits, group=group, min_features=16))
+        out = e.generate(prompts)
+        agree = float(jnp.mean((out == dense).astype(jnp.float32)))
+        print(f"{tag:14s} int{n_bits}: packed {frac:.0%} of param bytes, "
+              f"token agreement {agree:.0%} -> {out[0].tolist()}")
+
+    # continuous batching with quantized weights
+    eng.quantize(PimQuantConfig(n_bits=8, min_features=16))
+    cb = ContinuousBatcher(cfg, eng.params, n_slots=2, cache_len=48, prompt_len=8)
+    for uid in range(6):
+        cb.submit(Request(uid=uid, prompt=prompts[uid % 4], max_new_tokens=4))
+    t0 = time.perf_counter()
+    results = cb.run_until_drained()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    print(f"\ncontinuous batching: {len(results)} requests, {n_tok} tokens, "
+          f"{dt:.1f}s (2 slots, PIM-resident weights)")
+
+
+if __name__ == "__main__":
+    main()

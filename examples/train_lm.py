@@ -1,0 +1,68 @@
+"""End-to-end driver (deliverable b): train a ~100M-param qwen2-family LM
+for a few hundred steps with the full production substrate — sharded
+params, fault-tolerant checkpointing, prefetching data pipeline,
+straggler monitor — scaled to this CPU host.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params; on CPU this takes a while — use --d-model 256 for a
+faster demonstration with the identical code path.)
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig
+from repro.models import init_lm
+from repro.models.transformer import count_params
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"),
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(2, args.d_model // 128), n_kv_heads=max(1, args.d_model // 256),
+        d_ff=args.d_model * 4, vocab_size=args.vocab, remat=False,
+    )
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    print(f"model: {cfg.name}-mini, {count_params(params)/1e6:.1f}M params")
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_train_")
+    stragglers = []
+    trainer = Trainer(
+        cfg, params, data_cfg, ckpt_dir,
+        opt_cfg=AdamWConfig(lr=1e-3),
+        trainer_cfg=TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                                  log_every=20),
+        straggler_callback=stragglers.append,
+    )
+    log = trainer.run()
+    first, last = log[0], log[-1]
+    print(f"\nloss: {first['loss']:.3f} (step {first['step']}) -> "
+          f"{last['loss']:.3f} (step {last['step']})")
+    print(f"accuracy: {first['accuracy']:.3f} -> {last['accuracy']:.3f}")
+    print(f"checkpoints in {ckpt_dir} (resume by re-running with --ckpt-dir)")
+    if stragglers:
+        print(f"straggler events: {[(e.step, round(e.step_time, 2)) for e in stragglers]}")
+    assert last["loss"] < first["loss"], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Core: the paper's primary contribution — Gold Standard + IMAGine."""
+
+from .gold_standard import (
+    GoldRange,
+    GoldScore,
+    ReductionFit,
+    array_reduction_gold,
+    fit_reduction_model,
+    inblock_reduction_gold,
+    score_published,
+)
+from .fpga_devices import DEVICES, PUBLISHED, FpgaDevice, PublishedPim, peak_tops
+from .gemv_engine import ImagineConfig, ImagineGemv, reduction_model_cycles
+from .isa import Instr, Op, assemble, cycle_cost
+from .pim_array import ArrayGeometry, PimArray
+from .tpu_gold import TPU_V5E, ChipSpec, RooflineTerms, roofline_terms
+
+__all__ = [
+    "GoldRange", "GoldScore", "ReductionFit", "array_reduction_gold",
+    "fit_reduction_model", "inblock_reduction_gold", "score_published",
+    "DEVICES", "PUBLISHED", "FpgaDevice", "PublishedPim", "peak_tops",
+    "ImagineConfig", "ImagineGemv", "reduction_model_cycles",
+    "Instr", "Op", "assemble", "cycle_cost",
+    "ArrayGeometry", "PimArray",
+    "TPU_V5E", "ChipSpec", "RooflineTerms", "roofline_terms",
+]

@@ -1,0 +1,219 @@
+"""IMAGine — the paper's GEMV engine, as a program over the PIM array.
+
+System architecture (paper Fig. 3): a 2-D array of GEMV tiles (here the
+tile boundary is dissolved into one logical R x C block array — tiles are
+a floorplanning construct), a controller that decodes 30-bit instructions,
+and a column of shift registers reading out the west edge.
+
+Mapping of y = W @ x, W in Z^{M x D}:
+
+  * output row r is computed by block-row (r mod R) during pass (r // R);
+  * the D columns are striped contiguously over the `C*k` PE lanes of a
+    block row: lane (c, i) owns columns [(c*k+i)*e, (c*k+i+1)*e);
+  * each lane serially MACs its `e` resident weights against the (pre-
+    broadcast) x slice — bit-serial Booth radix-2, `acc_bits` accumulator;
+  * in-block FOLD (log2 k levels) then east->west HOP (log2 C levels)
+    reduce the lane partials to block-column 0 — the eqn (1)/(2) dataflow;
+  * SHIFTOUT drains one output element per block row per pass.
+
+Cycle accounting comes from the ISA cost model (isa.cycle_cost); the
+closed-form `analytic_cycles` below must agree exactly with the executed
+program (asserted in tests) — this is the model plotted in Fig. 7.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .isa import Instr, Op, OP_PARAMS_LOAD_CYCLES, cycle_cost
+from .pim_array import ArrayGeometry, PimArray, _ints_to_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class ImagineConfig:
+    rows: int = 4
+    cols: int = 4
+    lanes: int = 16
+    depth: int = 1024
+    n_bits: int = 8
+    acc_bits: int = 32  # paper uses 32-bit accumulation (Table IX)
+
+    @property
+    def geometry(self) -> ArrayGeometry:
+        return ArrayGeometry(self.rows, self.cols, self.lanes, self.depth)
+
+    @property
+    def lanes_per_row(self) -> int:
+        return self.cols * self.lanes
+
+
+@dataclasses.dataclass
+class GemvPlan:
+    """Static schedule for one (M, D) GEMV."""
+
+    m: int
+    d: int
+    e: int        # elements per lane
+    passes: int   # output rows per block-row
+    addr_w0: int  # weight region base
+    addr_x0: int  # x region base
+    addr_acc: int
+
+    def addr_w(self, p: int, t: int, n_bits: int) -> int:
+        return self.addr_w0 + (p * self.e + t) * n_bits
+
+    def addr_x(self, t: int, n_bits: int) -> int:
+        return self.addr_x0 + t * n_bits
+
+
+class ImagineGemv:
+    """Builds + executes GEMV programs; the cycle-accurate IMAGine model."""
+
+    def __init__(self, config: ImagineConfig):
+        self.cfg = config
+        self.array = PimArray(config.geometry)
+        self.array.n_bits = config.n_bits
+        self.array.acc_bits = config.acc_bits
+
+    # -- planning -----------------------------------------------------------
+
+    def plan(self, m: int, d: int) -> GemvPlan:
+        cfg = self.cfg
+        e = max(1, math.ceil(d / cfg.lanes_per_row))
+        passes = math.ceil(m / cfg.rows)
+        addr_w0 = 0
+        addr_x0 = passes * e * cfg.n_bits
+        addr_acc = addr_x0 + e * cfg.n_bits
+        need = addr_acc + cfg.acc_bits
+        if need > cfg.depth:
+            raise ValueError(
+                f"GEMV {m}x{d} does not fit the register file: needs {need} "
+                f"bits/lane > depth {cfg.depth} (e={e}, passes={passes})"
+            )
+        return GemvPlan(m, d, e, passes, addr_w0, addr_x0, addr_acc)
+
+    # -- data placement (host DMA; weights are PIM-resident) ----------------
+
+    def load_matrix(self, w: np.ndarray, plan: GemvPlan) -> None:
+        cfg = self.cfg
+        r, c, k, e, p = cfg.rows, cfg.cols, cfg.lanes, plan.e, plan.passes
+        # words[R, C, k, passes*e]: pass-major weight slots per lane
+        words = np.zeros((r, c, k, p * e), dtype=np.int64)
+        for out_row in range(plan.m):
+            pp, rr = divmod(out_row, r)
+            for col in range(plan.d):
+                lane_flat, t = divmod(col, e)
+                cc, ii = divmod(lane_flat, k)
+                words[rr, cc, ii, pp * e + t] = w[out_row, col]
+        self.array.host_write_block(words, plan.addr_w0, cfg.n_bits)
+
+    def load_vector(self, x: np.ndarray, plan: GemvPlan) -> None:
+        cfg = self.cfg
+        r, c, k, e = cfg.rows, cfg.cols, cfg.lanes, plan.e
+        words = np.zeros((r, c, k, e), dtype=np.int64)
+        for col in range(plan.d):
+            lane_flat, t = divmod(col, e)
+            cc, ii = divmod(lane_flat, k)
+            words[:, cc, ii, t] = x[col]
+        self.array.host_write_block(words, plan.addr_x0, cfg.n_bits)
+        # bit-serial broadcast through the input registers + fanout tree
+        self.array.cycles += self.vector_load_cycles(plan)
+
+    def vector_load_cycles(self, plan: GemvPlan) -> int:
+        """x slices stream to all lanes in parallel, one bit per cycle."""
+        return plan.e * self.cfg.n_bits
+
+    # -- program ------------------------------------------------------------
+
+    def build_pass_program(self, plan: GemvPlan, p: int) -> List[Instr]:
+        cfg = self.cfg
+        prog: List[Instr] = [
+            Instr(Op.SETPREC, imm=min(cfg.n_bits, 31)),
+            Instr(Op.SELALL),
+            Instr(Op.SETPTR, addr1=plan.addr_acc),
+            # clear accumulator: acc <- acc - acc
+            Instr(Op.SUB, addr1=plan.addr_acc, addr2=plan.addr_acc),
+        ]
+        for t in range(plan.e):
+            prog.append(
+                Instr(Op.MACC, addr1=plan.addr_w(p, t, cfg.n_bits),
+                      addr2=plan.addr_x(t, cfg.n_bits))
+            )
+        for level in range(int(math.log2(cfg.lanes))):
+            prog.append(Instr(Op.FOLD, imm=level))
+        for level in range(int(math.log2(cfg.cols))):
+            prog.append(Instr(Op.HOP, imm=level))
+        prog.append(Instr(Op.SHIFTOUT, imm=cfg.rows))
+        return prog
+
+    def run_gemv(self, w: np.ndarray, x: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Execute y = W @ x bit-serially. Returns (y, cycles)."""
+        m, d = w.shape
+        plan = self.plan(m, d)
+        _check_range(w, self.cfg.n_bits, "W")
+        _check_range(x, self.cfg.n_bits, "x")
+        self.array.cycles = 0
+        self.array.out_buffer.clear()
+        self.load_matrix(w, plan)
+        start = self.array.cycles
+        self.load_vector(x, plan)
+        for p in range(plan.passes):
+            self.array.execute(self.build_pass_program(plan, p))
+        y_rows = np.stack(self.array.out_buffer, axis=0)  # [passes, R]
+        y = y_rows.reshape(-1)[: m]
+        # interleave: pass p, row r -> output p*R + r
+        y = y_rows.reshape(plan.passes * self.cfg.rows)[: m]
+        return y, self.array.cycles - start
+
+    # -- closed-form cycle model (Fig. 7 / §V-F) -----------------------------
+
+    def analytic_cycles(self, m: int, d: int) -> int:
+        cfg = self.cfg
+        plan = self.plan(m, d)
+        per_pass = self._pass_cycles(plan)
+        return self.vector_load_cycles(plan) + plan.passes * per_pass
+
+    def _pass_cycles(self, plan: GemvPlan) -> int:
+        cfg = self.cfg
+        n, a = cfg.n_bits, cfg.acc_bits
+        cyc = 3  # SETPREC + SELALL + SETPTR
+        cyc += 2 * a + OP_PARAMS_LOAD_CYCLES  # accumulator clear (SUB)
+        cyc += plan.e * (4 * n * (n + 1) + OP_PARAMS_LOAD_CYCLES)  # MACCs
+        cyc += int(math.log2(cfg.lanes)) * (a + 4 + OP_PARAMS_LOAD_CYCLES)
+        for level in range(int(math.log2(cfg.cols))):
+            cyc += (a + 4) + (1 << level) + OP_PARAMS_LOAD_CYCLES
+        cyc += cfg.rows + OP_PARAMS_LOAD_CYCLES  # SHIFTOUT
+        return cyc
+
+    def reduction_cycles(self, m: int, d: int) -> int:
+        """Cycles outside the multiplication stage (the §V-G definition)
+        for the whole GEMV — what eqn (1) is fitted against."""
+        cfg = self.cfg
+        plan = self.plan(m, d)
+        total = self.analytic_cycles(m, d)
+        mult = plan.passes * plan.e * (4 * cfg.n_bits * (cfg.n_bits + 1) + OP_PARAMS_LOAD_CYCLES)
+        return total - mult
+
+
+def reduction_model_cycles(n_acc: int, p: int, k: int = 16) -> float:
+    """Closed-form IMAGine reduction latency for `p` array partial sums at
+    accumulation width `n_acc` — the latency_fn handed to
+    gold_standard.fit_reduction_model to reproduce Table IX.
+
+    FOLD level: (n_acc + 4) + 1 param-load; HOP level h adds 2^h movement.
+    """
+    cyc = math.log2(k) * (n_acc + 4 + OP_PARAMS_LOAD_CYCLES)
+    levels = int(math.log2(p)) if p > 1 else 0
+    for h in range(levels):
+        cyc += (n_acc + 4) + (1 << h) + OP_PARAMS_LOAD_CYCLES
+    return cyc
+
+
+def _check_range(arr: np.ndarray, n_bits: int, name: str) -> None:
+    lo, hi = -(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1
+    if arr.min() < lo or arr.max() > hi:
+        raise ValueError(f"{name} values out of {n_bits}-bit signed range")

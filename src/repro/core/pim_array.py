@@ -1,0 +1,275 @@
+"""Functional, bit-exact simulator of the IMAGine PIM array.
+
+This is the *paper-faithful reproduction baseline*: a 2-D array of
+PiCaSO-IM blocks, each one RAMB18 = `k` bit-serial PE lanes with a
+1024-bit register file per lane. Arithmetic is executed the way the
+hardware does it — bit-serially, with ripple carries and Booth radix-2
+partial products on two's-complement bit vectors — so results are exact
+for any operand width (no host integer-width shortcuts).
+
+The simulator plays the role PiMulator/CIMulator play in the paper's
+related work: a host-side emulator used to validate the architecture and
+count cycles. The performance path of this repo (kernels/, models/) is
+the TPU-native adaptation; this module is the oracle it is compared
+against conceptually (same GEMV semantics, same reduction dataflow).
+
+State layout:  rf[R, C, k, depth]  — one uint8 bit per register-file cell,
+little-endian within a word; two's complement for signed words.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .isa import Instr, Op, cycle_cost
+
+
+@dataclasses.dataclass
+class ArrayGeometry:
+    rows: int           # block rows (R)
+    cols: int           # block columns (C)
+    lanes: int = 16     # PEs per block (k) — one RAMB18 = 16 bitlines
+    depth: int = 1024   # register-file bits per lane
+
+    @property
+    def n_pe(self) -> int:
+        return self.rows * self.cols * self.lanes
+
+    @property
+    def lanes_per_row(self) -> int:
+        return self.cols * self.lanes
+
+
+class PimArray:
+    """Bit-exact PIM array with an instruction-level execution engine."""
+
+    def __init__(self, geom: ArrayGeometry):
+        if geom.lanes & (geom.lanes - 1):
+            raise ValueError("lanes must be a power of two (fold network)")
+        if geom.cols & (geom.cols - 1):
+            raise ValueError("cols must be a power of two (hop network)")
+        self.geom = geom
+        self.rf = np.zeros((geom.rows, geom.cols, geom.lanes, geom.depth), dtype=np.uint8)
+        self.enable = np.ones((geom.rows, geom.cols), dtype=bool)
+        self.ptr = 0
+        self.n_bits = 8
+        self.acc_bits = 24
+        self.cycles = 0
+        self.instr_count = 0
+        self.out_buffer: List[np.ndarray] = []
+
+    # -- host-side DMA (not part of the cycle-counted GEMV program) --------
+
+    def host_write(self, row: int, col: int, lane: int, addr: int, value: int, nbits: int) -> None:
+        self.rf[row, col, lane, addr : addr + nbits] = _int_to_bits(value, nbits)
+
+    def host_write_block(self, values: np.ndarray, addr: int, nbits: int) -> None:
+        """values[R, C, k, words] — bulk two's-complement write."""
+        r, c, k, w = values.shape
+        bits = _ints_to_bits(values.astype(np.int64), nbits)  # [R,C,k,w,nbits]
+        self.rf[:r, :c, :k, addr : addr + w * nbits] = bits.reshape(r, c, k, w * nbits)
+
+    def host_read(self, row: int, col: int, lane: int, addr: int, nbits: int) -> int:
+        return _bits_to_int(self.rf[row, col, lane, addr : addr + nbits])
+
+    def read_words(self, addr: int, nbits: int) -> np.ndarray:
+        """Signed words at `addr` for every lane -> int64 [R, C, k]."""
+        bits = self.rf[:, :, :, addr : addr + nbits].astype(np.int64)
+        weights = (1 << np.arange(nbits, dtype=np.int64))
+        mag = (bits * weights).sum(axis=-1)
+        sign = bits[..., -1]
+        return mag - (sign << nbits)
+
+    # -- bit-serial primitives (vectorized across all lanes) ---------------
+
+    def _masked_store(self, addr: int, bits: np.ndarray) -> None:
+        """Store bits [R,C,k,w] at addr, gated by the block-enable mask."""
+        w = bits.shape[-1]
+        mask = self.enable[:, :, None, None]
+        region = self.rf[:, :, :, addr : addr + w]
+        self.rf[:, :, :, addr : addr + w] = np.where(mask, bits, region)
+
+    def _serial_add(self, a: np.ndarray, b: np.ndarray, width: int, sub: bool = False) -> np.ndarray:
+        """Ripple bit-serial add/sub of little-endian bit tensors.
+
+        a, b: [..., wa], [..., wb] two's complement; result [..., width].
+        Exactly the dataflow of the PE's 1-bit full adder walking the RF.
+        """
+        a = _sign_extend_bits(a, width)
+        b = _sign_extend_bits(b, width)
+        if sub:
+            b = 1 - b
+            carry = np.ones(a.shape[:-1], dtype=np.uint8)
+        else:
+            carry = np.zeros(a.shape[:-1], dtype=np.uint8)
+        out = np.empty_like(a)
+        for i in range(width):
+            ai, bi = a[..., i], b[..., i]
+            s = ai ^ bi ^ carry
+            carry = (ai & bi) | (carry & (ai ^ bi))
+            out[..., i] = s
+        return out
+
+    def _booth_multiply(self, a: np.ndarray, b: np.ndarray, n: int, width: int) -> np.ndarray:
+        """Booth radix-2 signed multiply of n-bit operands -> `width` bits.
+
+        For each pair (b_i, b_{i-1}): 01 -> +a<<i, 10 -> -a<<i. Shifts are
+        realized by bit-aligned serial adds — the same partial-product walk
+        the PE performs.
+        """
+        acc = np.zeros(a.shape[:-1] + (width,), dtype=np.uint8)
+        prev = np.zeros(a.shape[:-1], dtype=np.uint8)
+        a_ext = _sign_extend_bits(a, width)
+        for i in range(n):
+            bi = b[..., i]
+            plus = ((bi == 0) & (prev == 1))   # 01 -> add
+            minus = ((bi == 1) & (prev == 0))  # 10 -> subtract
+            shifted = np.concatenate(
+                [np.zeros(a.shape[:-1] + (i,), dtype=np.uint8), a_ext[..., : width - i]],
+                axis=-1,
+            )
+            added = self._serial_add(acc, shifted, width, sub=False)
+            subbed = self._serial_add(acc, shifted, width, sub=True)
+            sel_plus = plus[..., None]
+            sel_minus = minus[..., None]
+            acc = np.where(sel_plus, added, np.where(sel_minus, subbed, acc))
+            prev = bi
+        # The loop covers the full Booth recoding: with the virtual
+        # b_{-1} = 0 start, sum(digit_i * 2^i) equals the two's-complement
+        # value of b including the negative MSB weight.
+        return acc
+
+    # -- instruction execution ---------------------------------------------
+
+    def execute(self, program: Sequence[Instr]) -> int:
+        """Run a program; returns cycles consumed (adds to self.cycles)."""
+        start = self.cycles
+        for instr in program:
+            self._step(instr)
+            self.cycles += cycle_cost(instr, self.n_bits, self.acc_bits)
+            self.instr_count += 1
+            if instr.op == Op.END:
+                break
+        return self.cycles - start
+
+    def _step(self, instr: Instr) -> None:
+        op = instr.op
+        g = self.geom
+        if op in (Op.NOP, Op.END):
+            return
+        if op == Op.SETPTR:
+            self.ptr = instr.addr1
+        elif op == Op.SELBLK:
+            self.enable[:] = False
+            flat = instr.imm
+            self.enable[flat // g.cols, flat % g.cols] = True
+        elif op == Op.SELROW:
+            self.enable[:] = False
+            self.enable[instr.imm, :] = True
+        elif op == Op.SELALL:
+            self.enable[:] = True
+        elif op == Op.SETPREC:
+            self.n_bits = instr.imm if instr.imm > 0 else 32
+        elif op == Op.BCAST:
+            val = _int_to_bits(instr.addr1 | (instr.addr2 << 10), self.n_bits)
+            bits = np.broadcast_to(val, (g.rows, g.cols, g.lanes, self.n_bits))
+            self._masked_store(self.ptr, bits.copy())
+        elif op in (Op.ADD, Op.SUB):
+            a = self.rf[:, :, :, instr.addr1 : instr.addr1 + self.acc_bits]
+            b = self.rf[:, :, :, instr.addr2 : instr.addr2 + self.acc_bits]
+            res = self._serial_add(a, b, self.acc_bits, sub=(op == Op.SUB))
+            self._masked_store(self.ptr, res)
+        elif op == Op.MULT:
+            a = self.rf[:, :, :, instr.addr1 : instr.addr1 + self.n_bits]
+            b = self.rf[:, :, :, instr.addr2 : instr.addr2 + self.n_bits]
+            res = self._booth_multiply(a, b, self.n_bits, self.acc_bits)
+            self._masked_store(self.ptr, res)
+        elif op == Op.MACC:
+            a = self.rf[:, :, :, instr.addr1 : instr.addr1 + self.n_bits]
+            b = self.rf[:, :, :, instr.addr2 : instr.addr2 + self.n_bits]
+            prod = self._booth_multiply(a, b, self.n_bits, self.acc_bits)
+            acc = self.rf[:, :, :, self.ptr : self.ptr + self.acc_bits]
+            res = self._serial_add(acc, prod, self.acc_bits)
+            self._masked_store(self.ptr, res)
+        elif op == Op.FOLD:
+            self._fold(instr.imm)
+        elif op == Op.HOP:
+            self._hop(instr.imm)
+        elif op == Op.SHIFTOUT:
+            self._shiftout()
+        else:  # pragma: no cover - enum is closed
+            raise NotImplementedError(op)
+
+    def _fold(self, level: int) -> None:
+        """In-block reduction step: lane i += lane (i + 2^level) for lanes
+        aligned to 2^(level+1) — PiCaSO's zero-copy OpMux folding."""
+        g, w = self.geom, self.acc_bits
+        stride = 1 << level
+        acc = self.rf[:, :, :, self.ptr : self.ptr + w]
+        dst_idx = np.arange(0, g.lanes, 2 * stride)
+        src_idx = dst_idx + stride
+        src_idx = src_idx[src_idx < g.lanes]
+        dst_idx = dst_idx[: len(src_idx)]
+        if len(dst_idx) == 0:
+            return
+        summed = self._serial_add(acc[:, :, dst_idx], acc[:, :, src_idx], w)
+        mask = self.enable[:, :, None, None]
+        cur = self.rf[:, :, dst_idx, self.ptr : self.ptr + w]
+        self.rf[:, :, dst_idx, self.ptr : self.ptr + w] = np.where(mask, summed, cur)
+
+    def _hop(self, level: int) -> None:
+        """Array-level binary-hopping step across block columns: block col
+        j += block col (j + 2^level), lane-0 accumulators, east -> west."""
+        g, w = self.geom, self.acc_bits
+        stride = 1 << level
+        acc = self.rf[:, :, 0, self.ptr : self.ptr + w]  # [R, C, w]
+        dst_idx = np.arange(0, g.cols, 2 * stride)
+        src_idx = dst_idx + stride
+        src_idx = src_idx[src_idx < g.cols]
+        dst_idx = dst_idx[: len(src_idx)]
+        if len(dst_idx) == 0:
+            return
+        summed = self._serial_add(acc[:, dst_idx], acc[:, src_idx], w)
+        self.rf[:, dst_idx, 0, self.ptr : self.ptr + w] = summed
+
+    def _shiftout(self) -> None:
+        """Column shift registers: read the west-most lane-0 accumulator of
+        each block row into the output FIFO."""
+        w = self.acc_bits
+        vals = self.read_words(self.ptr, w)[:, 0, 0]  # [R]
+        self.out_buffer.append(vals)
+
+
+# ---------------------------------------------------------------------------
+# bit packing helpers
+# ---------------------------------------------------------------------------
+
+def _int_to_bits(value: int, nbits: int) -> np.ndarray:
+    value = int(value) & ((1 << nbits) - 1)
+    return np.array([(value >> i) & 1 for i in range(nbits)], dtype=np.uint8)
+
+
+def _ints_to_bits(values: np.ndarray, nbits: int) -> np.ndarray:
+    vals = values.astype(np.int64) & ((1 << nbits) - 1)
+    shifts = np.arange(nbits, dtype=np.int64)
+    return ((vals[..., None] >> shifts) & 1).astype(np.uint8)
+
+
+def _bits_to_int(bits: np.ndarray) -> int:
+    nbits = bits.shape[-1]
+    mag = int((bits.astype(np.int64) * (1 << np.arange(nbits, dtype=np.int64))).sum())
+    if bits[-1]:
+        mag -= 1 << nbits
+    return mag
+
+
+def _sign_extend_bits(bits: np.ndarray, width: int) -> np.ndarray:
+    w = bits.shape[-1]
+    if w >= width:
+        return bits[..., :width]
+    sign = bits[..., -1:]
+    ext = np.broadcast_to(sign, bits.shape[:-1] + (width - w,))
+    return np.concatenate([bits, ext], axis=-1)

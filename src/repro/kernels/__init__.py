@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: bit-plane GEMV.
+
+bitplane_gemv   decode-shape kernel (B untiled)
+bitplane_gemm   prefill/training-shape kernel (B tiled)
+pack            digit-plane packing kernel
+ops             public jit'd wrappers (dispatch + epilogue)
+ref             pure-jnp oracles
+"""
+
+from .bitplane_gemm import bitplane_gemm
+from .bitplane_gemv import bitplane_gemv
+from .pack import pack_bitplanes
+from . import ops, ref
+
+__all__ = ["bitplane_gemm", "bitplane_gemv", "pack_bitplanes", "ops", "ref"]

@@ -1,0 +1,94 @@
+"""Public jit'd wrappers around the bit-plane kernels.
+
+`bitplane_matmul` is the op the model stack calls (quant.PimLinear): it
+dispatches between the Pallas kernels (TPU, or interpret=True on CPU for
+validation) and the pure-jnp reference (CPU dry-run lowering), applies the
+unsigned-offset correction and the per-channel dequantization scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitplane_gemm import bitplane_gemm
+from .bitplane_gemv import bitplane_gemv
+from .pack import pack_bitplanes
+
+Impl = Literal["auto", "pallas", "pallas_interpret", "ref"]
+
+#: B threshold below which the GEMV (untiled-B) kernel is used
+_GEMV_MAX_B = 512
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize_and_pack(
+    w: jnp.ndarray, n_bits: int, group: int = 1, impl: Impl = "auto"
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """W [K, M] float -> (planes [n_d, K*g//8, M] u8, scale [M] f32)."""
+    w_q, scale = ref.quantize_ref(w, n_bits)
+    u = (w_q + 2 ** (n_bits - 1)).astype(jnp.uint8)
+    dpb = 8 // group
+    k, m = u.shape
+    u_r = u.reshape(k // dpb, dpb, m).transpose(1, 0, 2)  # [dpb, K8, M]
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        planes = ref.pack_ref(w_q, n_bits, group)
+    else:
+        planes = pack_bitplanes(
+            u_r, n_bits=n_bits, group=group, interpret=(impl == "pallas_interpret")
+        )
+    return planes, scale
+
+
+def bitplane_matmul(
+    x: jnp.ndarray,        # [B, K] or [..., K]
+    planes: jnp.ndarray,   # [n_digits, K*g//8, M] uint8
+    scale: jnp.ndarray,    # [M] f32
+    *,
+    n_bits: int,
+    group: int = 1,
+    impl: Impl = "auto",
+    block_m: int = 256,
+    block_k8: int = 128,
+) -> jnp.ndarray:
+    """y = x @ dequant(planes, scale); batch dims flattened internally."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xf = x.reshape(-1, k)
+    b = xf.shape[0]
+    m = planes.shape[-1]
+
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        y = ref.bitplane_matmul_ref(xf, planes, scale, n_bits, group)
+        return y.reshape(*lead, m)
+
+    interpret = impl == "pallas_interpret" or not _on_tpu()
+    x_r = ref.prepare_x_ref(xf, group)
+    kern = bitplane_gemv if b <= _GEMV_MAX_B else bitplane_gemm
+    raw = kern(
+        x_r,
+        planes,
+        n_bits=n_bits,
+        group=group,
+        block_m=block_m,
+        block_k8=block_k8,
+        interpret=interpret,
+    )
+    off = float(2 ** (n_bits - 1))
+    sum_x = jnp.sum(xf.astype(jnp.float32), axis=-1, keepdims=True)
+    y = (raw - off * sum_x) * scale[None, :]
+    return y.astype(x.dtype).reshape(*lead, m)
+
+
+def packed_bytes(k: int, m: int, n_bits: int, group: int = 1) -> int:
+    """HBM bytes of the packed representation — the bandwidth-amplification
+    accounting used by the roofline (paper: '100% of BRAM bandwidth')."""
+    nd = -(-n_bits // group)
+    return nd * (k * group // 8) * m + 4 * m  # planes + f32 scale

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: pack quantized weights into digit planes.
+
+planes[j, q, m] = sum_r digit_j(U[q*dpb + r, m]) << (g*r)
+
+Input arrives pre-strided as u_r [dpb, K8, M] (u_r[r, q, m] =
+U[q*dpb + r, m], an XLA transpose done once at quantization time) so the
+kernel is a pure VPU shift/mask/accumulate over aligned [K8, M] tiles —
+no in-kernel reshapes. Packing runs once per weight matrix (at load or
+after an optimizer step in quantized-serving pipelines), so this kernel
+is bandwidth- not latency-critical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(ur_ref, out_ref, *, n_bits: int, group: int):
+    dpb = 8 // group
+    digit_mask = (1 << group) - 1
+    nd = -(-n_bits // group)
+    for j in range(nd):
+        acc = jnp.zeros(out_ref.shape[1:], jnp.uint8)
+        for r in range(dpb):
+            digit = (ur_ref[r] >> (group * j)) & digit_mask  # uint8 [bk8, bm]
+            acc = acc | (digit << (group * r)).astype(jnp.uint8)
+        out_ref[j] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "group", "block_k8", "block_m", "interpret")
+)
+def pack_bitplanes(
+    u_r: jnp.ndarray,  # [8/g, K8, M] uint8 — offset weights, pre-strided
+    *,
+    n_bits: int,
+    group: int = 1,
+    block_k8: int = 128,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    dpb, k8, m = u_r.shape
+    assert dpb == 8 // group
+    nd = -(-n_bits // group)
+    block_k8 = min(block_k8, k8)
+    block_m = min(block_m, m)
+    if k8 % block_k8 or m % block_m:
+        raise ValueError(f"K8={k8}/M={m} not divisible by {block_k8}/{block_m}")
+    grid = (k8 // block_k8, m // block_m)
+    kernel = functools.partial(_pack_kernel, n_bits=n_bits, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((dpb, block_k8, block_m), lambda q, j: (0, q, j))],
+        out_specs=pl.BlockSpec((nd, block_k8, block_m), lambda q, j: (0, q, j)),
+        out_shape=jax.ShapeDtypeStruct((nd, k8, m), jnp.uint8),
+        interpret=interpret,
+    )(u_r)

@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for the bit-plane kernels.
+
+The bit-plane format is the TPU adaptation of the paper's bit-serial PIM
+storage (DESIGN.md §2): an n-bit signed weight matrix is stored as
+`n_digits` planes of g-bit digits, 8/g digits packed per byte along the
+contraction (K) dimension:
+
+    W_q [K, M]  (int, two's complement, n_bits)
+    U = W_q + 2^(n-1)                      unsigned offset form
+    digit_j(U) = (U >> (g*j)) & (2^g - 1)  j = 0..n_digits-1
+    planes[j, kq, m] byte = sum_r digit_j(U[kq*(8/g)+r, m]) << (g*r)
+
+so `planes` has shape [n_digits, K*g//8, M] uint8 and the matmul is
+
+    x @ W_q = sum_j 2^(g*j) * (x_r @ digits_j) - 2^(n-1) * sum_k x_k
+
+g=1 is the paper's bit-serial Booth radix-2 analogue; g=2 is the
+IMAGine-slice4 / Booth radix-4 analogue (half the passes, same bytes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def check_dims(k: int, n_bits: int, group: int) -> int:
+    if group not in (1, 2, 4):
+        raise ValueError(f"group must be 1, 2 or 4, got {group}")
+    if not 2 <= n_bits <= 8:
+        raise ValueError(f"n_bits must be in [2, 8], got {n_bits}")
+    digits_per_byte = 8 // group
+    if k % digits_per_byte:
+        raise ValueError(f"K={k} not a multiple of {digits_per_byte}")
+    return digits_per_byte
+
+
+def n_digits(n_bits: int, group: int) -> int:
+    return -(-n_bits // group)
+
+
+def quantize_ref(w: jnp.ndarray, n_bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-output-channel quantization of W [K, M].
+
+    Returns (w_q int32 [K, M], scale f32 [M]) with w_q in
+    [-2^(n-1), 2^(n-1)-1].
+    """
+    qmax = float(2 ** (n_bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0).astype(jnp.float32)
+    w_q = jnp.clip(jnp.round(w / scale), -(qmax + 1), qmax).astype(jnp.int32)
+    return w_q, scale
+
+
+def pack_ref(w_q: jnp.ndarray, n_bits: int, group: int = 1) -> jnp.ndarray:
+    """Pack signed w_q [K, M] into digit planes [n_digits, K*g//8, M] u8."""
+    k, m = w_q.shape
+    dpb = check_dims(k, n_bits, group)
+    nd = n_digits(n_bits, group)
+    width = nd * group
+    u = (w_q + 2 ** (n_bits - 1)).astype(jnp.uint32)  # 0 .. 2^n - 1
+    digit_mask = (1 << group) - 1
+    planes = []
+    for j in range(nd):
+        digits = (u >> (group * j)) & digit_mask          # [K, M]
+        digits = digits.reshape(k // dpb, dpb, m)
+        shifts = (group * jnp.arange(dpb, dtype=jnp.uint32))[None, :, None]
+        packed = jnp.sum(digits << shifts, axis=1).astype(jnp.uint8)
+        planes.append(packed)
+    return jnp.stack(planes, axis=0)
+
+
+def unpack_ref(planes: jnp.ndarray, n_bits: int, group: int = 1) -> jnp.ndarray:
+    """Inverse of pack_ref: planes -> signed w_q [K, M] int32."""
+    nd, k8, m = planes.shape
+    dpb = 8 // group
+    digit_mask = (1 << group) - 1
+    u = jnp.zeros((k8 * dpb, m), dtype=jnp.uint32)
+    for j in range(nd):
+        for r in range(dpb):
+            digit = (planes[j].astype(jnp.uint32) >> (group * r)) & digit_mask
+            u = u.at[r::dpb].add(digit << (group * j))
+    return u.astype(jnp.int32) - 2 ** (n_bits - 1)
+
+
+def prepare_x_ref(x: jnp.ndarray, group: int = 1) -> jnp.ndarray:
+    """x [B, K] -> x_r [8/g, B, K*g//8] with x_r[r, :, q] = x[:, q*(8/g)+r]."""
+    b, k = x.shape
+    dpb = 8 // group
+    return x.reshape(b, k // dpb, dpb).transpose(2, 0, 1)
+
+
+def bitplane_matmul_ref(
+    x: jnp.ndarray,
+    planes: jnp.ndarray,
+    scale: jnp.ndarray,
+    n_bits: int,
+    group: int = 1,
+) -> jnp.ndarray:
+    """Oracle: y = x @ dequant(planes) — computed the straightforward way
+    (unpack to int, matmul in f32)."""
+    w_q = unpack_ref(planes, n_bits, group)
+    y = jnp.dot(x.astype(jnp.float32), w_q.astype(jnp.float32))
+    return (y * scale[None, :]).astype(x.dtype)
+
+
+def bitplane_matmul_planewise_ref(
+    x: jnp.ndarray,
+    planes: jnp.ndarray,
+    scale: jnp.ndarray,
+    n_bits: int,
+    group: int = 1,
+) -> jnp.ndarray:
+    """Second oracle following the kernel's exact contraction order
+    (digit-plane matmuls + offset correction) — used to bound the
+    float-accumulation discrepancy independently of the Pallas runtime."""
+    nd, k8, m = planes.shape
+    dpb = 8 // group
+    digit_mask = (1 << group) - 1
+    x_r = prepare_x_ref(x, group).astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], m), dtype=jnp.float32)
+    for j in range(nd):
+        for r in range(dpb):
+            digits = ((planes[j] >> (group * r)) & digit_mask).astype(jnp.float32)
+            acc += float(2 ** (group * j)) * jnp.dot(x_r[r], digits)
+    off = float(2 ** (n_bits - 1))
+    acc = acc - off * jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+    return (acc * scale[None, :]).astype(x.dtype)
+
+
+def dequantize_ref(planes, scale, n_bits: int, group: int = 1) -> jnp.ndarray:
+    return unpack_ref(planes, n_bits, group).astype(jnp.float32) * scale[None, :]

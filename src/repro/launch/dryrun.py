@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices (2 pods x 16 x 16). Nothing else in the repo
+sets this flag — tests and benchmarks see the real single CPU device.
+
+Per cell this script:
+  1. builds abstract params/opt/cache/batch (ShapeDtypeStruct, no alloc),
+  2. jit-lowers the right step (train_step / prefill / decode_step) with
+     explicit in/out shardings,
+  3. compiles (SPMD partitioning happens here — sharding mismatches and
+     compile-time OOM surface as hard failures),
+  4. records memory_analysis / cost_analysis / collective bytes,
+  5. emits a JSON artifact consumed by EXPERIMENTS.md and benchmarks.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist.sharding import SERVE_RULES, TRAIN_RULES, sharding_rules
+from ..models import decode_step, prefill
+from ..models.encdec import decode_step_encdec, prefill_encdec
+from ..optim import AdamWConfig
+from ..train.step import make_train_step
+from . import specs as S
+from .mesh import make_production_mesh, mesh_chips
+from .roofline import analyze_compiled, analytic_bytes_for_cell, model_flops_for_cell
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  n_microbatches: int = 2, quantized: bool = False):
+    """Returns the jit-lowered step. All inputs are abstract."""
+    replicated = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    params_shapes = S.abstract_params(cfg, quantized=quantized and shape.kind != "train")
+    rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+    p_shard = S.param_shardings(params_shapes, mesh, rules)
+
+    if shape.kind == "train":
+        opt_shapes = S.abstract_opt_state(params_shapes)
+        o_shard = S.opt_shardings(opt_shapes, p_shard)
+        batch_shapes, b_shard = S.train_batch_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, AdamWConfig(), n_microbatches=n_microbatches)
+        metrics_sh = {
+            k: replicated
+            for k in ("loss", "nll", "z_loss", "accuracy", "moe_aux",
+                      "grad_norm", "lr")
+        }
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, metrics_sh),
+            donate_argnums=(0, 1),
+        )
+        return fn.lower(params_shapes, opt_shapes, batch_shapes)
+
+    if shape.kind == "prefill":
+        cache_shapes = S.abstract_cache(cfg, shape)
+        c_shard = S.cache_shardings(cache_shapes, cfg, shape, mesh)
+        if cfg.is_encoder_decoder:
+            tok, tok_sh = S.prefill_token_specs(cfg, shape, mesh)
+            frames = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.d_model), jnp.float32
+            )
+            fn = jax.jit(
+                lambda p, fr, t: prefill_encdec(p, fr, t, cfg, shape.seq_len),
+                in_shardings=(p_shard, tok_sh, tok_sh),
+                out_shardings=(tok_sh, c_shard),
+            )
+            return fn.lower(params_shapes, frames, tok)
+        if cfg.frontend == "vision_stub":
+            nf = cfg.frontend_tokens
+            tok = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len - nf), jnp.int32
+            )
+            patches = jax.ShapeDtypeStruct(
+                (shape.global_batch, nf, cfg.d_model), jnp.float32
+            )
+            _, tok_sh = S.prefill_token_specs(cfg, shape, mesh)
+            fn = jax.jit(
+                lambda p, t, pe: prefill(p, t, cfg, shape.seq_len, extra_embeds=pe),
+                in_shardings=(p_shard, tok_sh, tok_sh),
+                out_shardings=(tok_sh, c_shard),
+            )
+            return fn.lower(params_shapes, tok, patches)
+        tok, tok_sh = S.prefill_token_specs(cfg, shape, mesh)
+        fn = jax.jit(
+            lambda p, t: prefill(p, t, cfg, shape.seq_len),
+            in_shardings=(p_shard, tok_sh),
+            out_shardings=(tok_sh, c_shard),
+        )
+        return fn.lower(params_shapes, tok)
+
+    # decode
+    cache_shapes = S.abstract_cache(cfg, shape)
+    c_shard = S.cache_shardings(cache_shapes, cfg, shape, mesh)
+    token, tok_sh = S.decode_token_spec(shape, mesh)
+    stepper = decode_step_encdec if cfg.is_encoder_decoder else decode_step
+    fn = jax.jit(
+        lambda p, t, c: stepper(p, t, c, cfg),
+        in_shardings=(p_shard, tok_sh, c_shard),
+        out_shardings=(tok_sh, c_shard),
+        donate_argnums=(2,),
+    )
+    return fn.lower(params_shapes, token, cache_shapes)
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, out_dir: Optional[str] = None,
+    quantized: bool = False,
+) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    cell = f"{arch}|{shape_name}|{'multi' if multi_pod else 'single'}"
+    if not ok:
+        return {"cell": cell, "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+    if quantized:
+        cell += "|pim-quantized"
+    t0 = time.time()
+    with mesh, sharding_rules(mesh, rules):
+        lowered = build_lowered(cfg, shape, mesh, quantized=quantized)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        params_shapes = S.abstract_params(cfg, quantized=quantized and shape.kind != "train")
+        mf = model_flops_for_cell(cfg, shape, params_shapes)
+        ab = analytic_bytes_for_cell(cfg, shape, params_shapes)
+        terms, detail = analyze_compiled(
+            cell, compiled, mesh_chips(mesh), mf, analytic_bytes=ab
+        )
+    result = {
+        "cell": cell,
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": mesh_chips(mesh),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "roofline": terms.as_dict(),
+        "detail": detail,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = cell.replace("|", "__").replace(".", "_") + ".json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                try:
+                    r = run_cell(arch, shape_name, mp, args.out)
+                    tag = r["status"]
+                    if tag == "ok":
+                        rf = r["roofline"]
+                        print(
+                            f"[OK] {r['cell']:55s} compile={r['compile_s']:7.1f}s "
+                            f"bound={rf['bound']:10s} "
+                            f"c/m/k={rf['compute_s']:.2e}/{rf['memory_s']:.2e}/"
+                            f"{rf['collective_s']:.2e}s "
+                            f"useful={rf['useful_flops_ratio']:.2f}",
+                            flush=True,
+                        )
+                    else:
+                        print(f"[SKIP] {r['cell']:54s} {r['reason']}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL] {arch}|{shape_name}|{mp}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Everything here is allocation-free: parameters, optimizer state, caches
+and batches are ShapeDtypeStructs; shardings are NamedShardings derived
+from the dist.sharding rules, with divisibility-aware fallbacks (a mesh
+axis is only used when it divides the dimension).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..dist.sharding import params_partition_specs, sharding_rules
+from ..models import init_cache, init_lm
+from ..models.encdec import init_encdec, init_encdec_cache
+from ..optim import adamw_init
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    names = (name,) if isinstance(name, str) else tuple(name)
+    out = 1
+    for n in names:
+        if n in mesh.axis_names:
+            out *= mesh.shape[n]
+    return out
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """Use `axes` for this dim only if it divides evenly."""
+    if axes is None:
+        return None
+    size = _axis_size(mesh, axes)
+    if size > 1 and dim % size == 0:
+        return axes
+    # try single-axis fallback for composite specs
+    if not isinstance(axes, str):
+        for a in axes:
+            if _axis_size(mesh, a) > 1 and dim % _axis_size(mesh, a) == 0:
+                return a
+    return None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer specs
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, quantized: bool = False):
+    """Abstract parameter tree; with quantized=True the projection weights
+    are PIM-packed (bit-plane) PimWeights — still allocation-free (the
+    quantize+pack trace runs under eval_shape)."""
+    key = jax.random.PRNGKey(0)
+    init = init_encdec if cfg.is_encoder_decoder else init_lm
+    if not quantized:
+        return jax.eval_shape(lambda: init(key, cfg))
+    from ..quant.bitplane import PimQuantConfig, quantize_tree
+    qcfg = PimQuantConfig(n_bits=cfg.quant_bits, group=cfg.quant_group,
+                          impl="ref", min_features=1024)
+    return jax.eval_shape(lambda: quantize_tree(init(key, cfg), qcfg))
+
+
+def abstract_opt_state(params_shapes):
+    return jax.eval_shape(adamw_init, params_shapes)
+
+
+def param_shardings(params_shapes, mesh: Mesh, rules=None):
+    with sharding_rules(mesh, rules):
+        specs = params_partition_specs(params_shapes)
+
+    def fixup(spec, leaf):
+        # drop axes that don't divide the dim
+        if not isinstance(spec, P):
+            return spec
+        shape = leaf.shape
+        axes = []
+        for i, ax in enumerate(spec):
+            if i >= len(shape):
+                axes.append(None)
+                continue
+            axes.append(_fit(mesh, shape[i], ax))
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(
+        fixup, specs, params_shapes,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def opt_shardings(opt_shapes, p_shard):
+    step_sh = jax.tree.map(lambda _: None, opt_shapes.step)
+    mesh = jax.tree_util.tree_leaves(p_shard)[0].mesh
+    replicated = NamedSharding(mesh, P())
+    return type(opt_shapes)(
+        step=replicated,
+        m=p_shard,
+        v=p_shard,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    b, t = shape.global_batch, shape.seq_len
+    ba = batch_axes(mesh)
+    bspec = _fit(mesh, b, ba)
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    batch = {"tokens": tok, "targets": tok}
+    shards = {"tokens": sh(bspec), "targets": sh(bspec)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), jnp.float32)
+        shards["frames"] = sh(bspec, None, _fit(mesh, cfg.d_model, "model"))
+    elif cfg.frontend == "vision_stub":
+        nf = cfg.frontend_tokens
+        batch["tokens"] = jax.ShapeDtypeStruct((b, t - nf), jnp.int32)
+        batch["targets"] = jax.ShapeDtypeStruct((b, t - nf), jnp.int32)
+        batch["patches"] = jax.ShapeDtypeStruct((b, nf, cfg.d_model), jnp.float32)
+        shards["patches"] = sh(bspec, None, _fit(mesh, cfg.d_model, "model"))
+    return batch, shards
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: init_encdec_cache(cfg, b, s, s)
+        )
+    return jax.eval_shape(lambda: init_cache(cfg, b, s))
+
+
+def cache_shardings(cache_shapes, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Rule-based cache layout (DESIGN.md §5):
+
+    decode_32k (large batch): batch over (pod,data), kv-heads over model.
+    long_500k  (batch=1):     sequence over data (SP), heads/inner over model.
+    """
+    from ..dist.sharding import current_context
+
+    b = shape.global_batch
+    ba = batch_axes(mesh)
+    bspec = _fit(mesh, b, ba)
+    ctx = current_context()
+
+    def spec_for(key: str, leaf) -> NamedSharding:
+        shp = leaf.shape
+        if key == "position" or len(shp) == 0:
+            return NamedSharding(mesh, P())
+        if key in ("k", "v", "shared_k", "shared_v", "xk", "xv"):
+            # [L, B, S, KV, hd] — resolved through the SAME rule context
+            # the model's internal shard_cache constraint uses, so the
+            # boundary spec and in-model constraint can never disagree
+            # (a disagreement makes XLA all-gather the whole cache).
+            assert ctx is not None, "cache_shardings needs sharding_rules()"
+            spec = ctx.resolve(
+                "layers", "batch", "kv_seq", "kv_heads", "cache_head_dim",
+                shape=tuple(shp),
+            )
+            return NamedSharding(mesh, spec)
+        if key == "ssm":
+            # [L, B, H, P, N]
+            h = _fit(mesh, shp[2], "model")
+            return NamedSharding(mesh, P(None, bspec, h, None, None))
+        if key == "conv":
+            # [L, B, k-1, cd]
+            cd = _fit(mesh, shp[3], "model")
+            return NamedSharding(mesh, P(None, bspec, None, cd))
+        if key in ("C",):
+            # [L, B, H, hd, hd]
+            h = _fit(mesh, shp[2], "model")
+            hd = None if h else _fit(mesh, shp[3], "model")
+            return NamedSharding(mesh, P(None, bspec, h, hd, None))
+        if key in ("n", "m"):
+            h = _fit(mesh, shp[2], "model")
+            return NamedSharding(mesh, P(*([None, bspec, h] + [None] * (len(shp) - 3))))
+        if key in ("sc", "sn", "sm", "sh"):
+            # [L, B, D]
+            d = _fit(mesh, shp[2], "model")
+            return NamedSharding(mesh, P(None, bspec, d))
+        return NamedSharding(mesh, P())
+
+    return {k: spec_for(k, v) for k, v in cache_shapes.items()}
+
+
+def decode_token_spec(shape: ShapeConfig, mesh: Mesh):
+    b = shape.global_batch
+    bspec = _fit(mesh, b, batch_axes(mesh))
+    return (
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        NamedSharding(mesh, P(bspec, None)),
+    )
+
+
+def prefill_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    b, t = shape.global_batch, shape.seq_len
+    bspec = _fit(mesh, b, batch_axes(mesh))
+    tok = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    return tok, NamedSharding(mesh, P(bspec, None))

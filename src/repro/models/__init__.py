@@ -1,0 +1,23 @@
+"""Pure-JAX model zoo: attention/MoE/Mamba2/xLSTM blocks + unified LMs."""
+
+from .transformer import (
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_lm,
+    prefill,
+)
+from .encdec import (
+    decode_step_encdec,
+    forward_encdec,
+    init_encdec,
+    init_encdec_cache,
+    prefill_encdec,
+)
+
+__all__ = [
+    "count_params", "decode_step", "forward", "init_cache", "init_lm",
+    "prefill", "decode_step_encdec", "forward_encdec", "init_encdec",
+    "init_encdec_cache", "prefill_encdec",
+]

@@ -1,0 +1,312 @@
+"""GQA attention with sliding windows, KV cache, and cross-attention.
+
+Supports every attention flavour in the assigned pool:
+  - GQA with arbitrary kv-head counts (MQA when n_kv=1 — granite-20b)
+  - QKV biases (qwen2 family)
+  - per-layer sliding windows (gemma3 5:1 local:global)
+  - decode with a pre-allocated KV cache (one token, cache length S)
+  - cross-attention over encoder outputs (whisper)
+
+All projections go through quant.pim_linear so any weight can be
+PIM-resident (bit-plane packed) — the paper's technique applied to the
+dominant GEMV of decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..quant.bitplane import pim_linear
+from .common import NEG_INF, Params, apply_rope, dense_init, split_keys
+
+
+def init_attention(
+    key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+    qkv_bias: bool = False,
+) -> Params:
+    ks = split_keys(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, hd):
+    b, t, _ = x.shape
+    q = pim_linear(x, params["wq"])
+    k = pim_linear(x, params["wk"])
+    v = pim_linear(x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    from ..dist.sharding import shard
+    return (
+        shard(q.reshape(b, t, n_heads, hd), "batch", "seq", "heads", "head_dim"),
+        shard(k.reshape(b, t, n_kv, hd), "batch", "seq", "kv_heads", "head_dim"),
+        shard(v.reshape(b, t, n_kv, hd), "batch", "seq", "kv_heads", "head_dim"),
+    )
+
+
+def _gqa_core(
+    q: jnp.ndarray,          # [B, T, H, hd]
+    k: jnp.ndarray,          # [B, S, KV, hd]
+    v: jnp.ndarray,          # [B, S, KV, hd]
+    mask: Optional[jnp.ndarray],  # [B or 1, T, S] additive f32, or None
+) -> jnp.ndarray:
+    b, t, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, t, kv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum(
+        "btkgh,bskh->bkgts", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if mask is not None:
+        scores = scores + mask[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, t, h * hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention for full-sequence paths
+# ---------------------------------------------------------------------------
+
+#: default blocks: [B, H, QB, KB] f32 scores stay VMEM-sized
+Q_BLOCK = 512
+KV_BLOCK = 1024
+#: above this many score elements per (batch,head) the dense path would
+#: materialize a [T, S] buffer; switch to the chunked path
+DENSE_SCORE_LIMIT = 1 << 21
+
+
+def _pick_block(n: int, target: int) -> int:
+    bl = min(target, n)
+    while n % bl:
+        bl //= 2
+    return max(bl, 1)
+
+
+def _chunked_gqa(
+    q: jnp.ndarray,            # [B, T, H, hd]
+    k: jnp.ndarray,            # [B, S, KV, hd]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,        # [T]
+    kv_pos: jnp.ndarray,       # [S]
+    window: Optional[jnp.ndarray],
+    causal: bool,
+) -> jnp.ndarray:
+    """Online-softmax attention, O(QB*KB) score memory (the TPU-idiomatic
+    flash form; on real TPUs the inner body maps onto a Pallas kernel —
+    here it must stay pure JAX so the CPU dry-run lowers it)."""
+    b, t, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qb = _pick_block(t, Q_BLOCK)
+    kb = _pick_block(s, KV_BLOCK)
+    nq, nk = t // qb, s // kb
+    scale = hd ** -0.5
+
+    q5 = q.reshape(b, nq, qb, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp2 = q_pos.reshape(nq, qb)
+    k5 = k.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 2, 3, 4)
+    v5 = v.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 2, 3, 4)
+    kp2 = kv_pos.reshape(nk, kb)
+
+    def q_body(_, q_in):
+        qi, qp = q_in                      # [B,qb,KV,G,hd], [qb]
+        qf = qi.astype(jnp.float32) * scale
+
+        def kv_body(carry, kv_in):
+            acc, m, l = carry
+            kj, vj, kp = kv_in             # [B,kb,KV,hd], [kb]
+            scores = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qf, kj.astype(jnp.float32)
+            )                               # [B,KV,G,qb,kb]
+            ok = jnp.ones((qb, kb), bool)
+            if causal:
+                ok = ok & (kp[None, :] <= qp[:, None])
+            if window is not None:
+                ok = ok & (kp[None, :] > qp[:, None] - window)
+            scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + p.sum(axis=-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, vj.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((b, kvh, g, qb, hd), jnp.float32),
+            jnp.full((b, kvh, g, qb), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, qb), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), init, (k5, v5, kp2)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4).reshape(b, qb, h * hd)
+
+    _, outs = jax.lax.scan(q_body, None, (q5, qp2))     # [nq, B, qb, Hhd]
+    return outs.transpose(1, 0, 2, 3).reshape(b, t, h * hd).astype(q.dtype)
+
+
+def _full_seq_attention(
+    q, k, v, q_pos, kv_pos, window, causal
+) -> jnp.ndarray:
+    """Dispatch dense vs chunked by score-buffer size."""
+    t, s = q.shape[1], k.shape[1]
+    if t * s <= DENSE_SCORE_LIMIT:
+        if causal:
+            ok = kv_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                ok = ok & (kv_pos[None, :] > q_pos[:, None] - window)
+            mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None]
+        else:
+            mask = None
+        return _gqa_core(q, k, v, mask)
+    return _chunked_gqa(q, k, v, q_pos, kv_pos, window, causal)
+
+
+def attention_forward(
+    params: Params,
+    x: jnp.ndarray,             # [B, T, D]
+    positions: jnp.ndarray,     # [T] int32
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
+    causal: bool = True,                   # False = bidirectional (encoder)
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill logits)."""
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions[None, :], rope_theta)
+    k = apply_rope(k, positions[None, :], rope_theta)
+    out = _full_seq_attention(q, k, v, positions, positions, window, causal)
+    return pim_linear(out, params["wo"])
+
+
+def attention_prefill(
+    params: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache_k: jnp.ndarray,       # [B, S_max, KV, hd] — pre-allocated
+    cache_v: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill: causal attention over the prompt + write KV into cache."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions[None, :], rope_theta)
+    k = apply_rope(k, positions[None, :], rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), 0, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), 0, axis=1
+    )
+    out = _full_seq_attention(q, k, v, positions, positions, window, causal=True)
+    return pim_linear(out, params["wo"]), cache_k, cache_v
+
+
+def attention_decode(
+    params: Params,
+    x: jnp.ndarray,             # [B, 1, D]
+    position: jnp.ndarray,      # scalar int32 — index of the new token
+    cache_k: jnp.ndarray,       # [B, S, KV, hd]
+    cache_v: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against the cache. This is the paper's workload:
+    a batch of GEMVs against PIM-resident weights + a KV-cache sweep."""
+    b = x.shape[0]
+    s = cache_k.shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos = position[None, None] if position.ndim == 0 else position
+    q = apply_rope(q, jnp.full((1, 1), 0, jnp.int32) + position, rope_theta)
+    k = apply_rope(k, jnp.full((1, 1), 0, jnp.int32) + position, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), position.astype(jnp.int32), axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), position.astype(jnp.int32), axis=1
+    )
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    ok = kv_pos <= position
+    if window is not None:
+        ok = ok & (kv_pos > position - window)
+    mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, None, :]
+    out = _gqa_core(q, cache_k, cache_v, mask)
+    return pim_linear(out, params["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, d_model: int, n_heads: int, head_dim: int) -> Params:
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim),
+        "wk": dense_init(ks[1], d_model, n_heads * head_dim),
+        "wv": dense_init(ks[2], d_model, n_heads * head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+
+
+def cross_attention_kv(params: Params, enc_out: jnp.ndarray, n_heads: int, hd: int):
+    from ..dist.sharding import shard
+    b, s, _ = enc_out.shape
+    k = pim_linear(enc_out, params["wk"]).reshape(b, s, n_heads, hd)
+    v = pim_linear(enc_out, params["wv"]).reshape(b, s, n_heads, hd)
+    k = shard(k, "batch", "seq", "heads", "head_dim")
+    v = shard(v, "batch", "seq", "heads", "head_dim")
+    return k, v
+
+
+def cross_attention_forward(
+    params: Params,
+    x: jnp.ndarray,           # [B, T, D] decoder states
+    k: jnp.ndarray,           # [B, S, H, hd] precomputed encoder K
+    v: jnp.ndarray,
+    n_heads: int,
+    head_dim: int,
+) -> jnp.ndarray:
+    from ..dist.sharding import shard
+    b, t, _ = x.shape
+    s = k.shape[1]
+    q = shard(
+        pim_linear(x, params["wq"]).reshape(b, t, n_heads, head_dim),
+        "batch", "seq", "heads", "head_dim",
+    )
+    out = _full_seq_attention(
+        q, k, v,
+        jnp.arange(t, dtype=jnp.int32), jnp.arange(s, dtype=jnp.int32),
+        window=None, causal=False,
+    )
+    return pim_linear(out, params["wo"])

@@ -1,0 +1,118 @@
+"""Shared model building blocks: norms, RoPE, init, dtype policy.
+
+Parameters are plain nested dicts of jnp arrays (pytrees) — no framework.
+Convention: projection kernels are named ``w*`` (PIM-quantizable), biases
+``b*``, norm gains ``g*``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def compute_dtype(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, fan_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (stddev 1/sqrt(fan_in))."""
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(
+        key, -3.0, 3.0, (fan_in, fan_out), dtype
+    )
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(dim: int) -> Params:
+    return {"g": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["g"]
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jnp.ndarray,            # [..., T, H, hd]
+    positions: jnp.ndarray,    # [..., T] int32
+    theta: float,
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                       # [..., T, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def causal_window_mask(
+    q_positions: jnp.ndarray,   # [Tq]
+    kv_positions: jnp.ndarray,  # [Tk]
+    window: Optional[jnp.ndarray] = None,  # scalar int or None
+) -> jnp.ndarray:
+    """[Tq, Tk] additive mask: causal, optionally sliding-window."""
+    qp = q_positions[:, None]
+    kp = kv_positions[None, :]
+    ok = kp <= qp
+    if window is not None:
+        ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)

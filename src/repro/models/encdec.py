@@ -1,0 +1,211 @@
+"""Encoder-decoder backbone (whisper-medium).
+
+The conv/mel frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings [B, S_enc, D]. The transformer backbone is
+real: a bidirectional encoder stack and a causal decoder stack with
+cross-attention (encoder K/V cached for decode).
+
+Decoder decode_32k uses a 32k self-attention cache — architecturally
+outlandish for speech (whisper caps at 448 decoder positions) but
+well-defined for the dry-run, as noted in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import shard
+from .attention import (
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    cross_attention_forward,
+    cross_attention_kv,
+    init_attention,
+    init_cross_attention,
+)
+from .common import Params, compute_dtype, embed_init, rmsnorm, rmsnorm_params, split_keys
+from .mlp import init_mlp, mlp
+
+Cache = Dict[str, jnp.ndarray]
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    n_enc = cfg.n_encoder_layers
+    n_dec = cfg.n_layers
+    keys = split_keys(key, n_enc + n_dec + 3)
+
+    def enc_layer(k):
+        ks = split_keys(k, 2)
+        return {
+            "ln1": rmsnorm_params(cfg.d_model),
+            "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd),
+            "ln2": rmsnorm_params(cfg.d_model),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+
+    def dec_layer(k):
+        ks = split_keys(k, 3)
+        return {
+            "ln1": rmsnorm_params(cfg.d_model),
+            "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd),
+            "ln_x": rmsnorm_params(cfg.d_model),
+            "xattn": init_cross_attention(ks[1], cfg.d_model, cfg.n_heads, cfg.hd),
+            "ln2": rmsnorm_params(cfg.d_model),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+        }
+
+    enc = [enc_layer(keys[i]) for i in range(n_enc)]
+    dec = [dec_layer(keys[n_enc + i]) for i in range(n_dec)]
+    return {
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": rmsnorm_params(cfg.d_model),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "dec_norm": rmsnorm_params(cfg.d_model),
+        "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model),
+    }
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: [B, S_enc, D] stub embeddings -> encoder states."""
+    dt = compute_dtype(cfg.dtype)
+    x = shard(frames.astype(dt), "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, lp):
+        h = attention_forward(
+            lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, causal=False,
+        )
+        xc = xc + h
+        xc = xc + mlp(lp["mlp"], rmsnorm(lp["ln2"], xc, cfg.norm_eps), "gelu")
+        return xc, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(lp, xc, positions, enc_k, enc_v, cfg):
+    h = attention_forward(
+        lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+    )
+    xc = xc + h
+    h = cross_attention_forward(
+        lp["xattn"], rmsnorm(lp["ln_x"], xc, cfg.norm_eps),
+        enc_k, enc_v, cfg.n_heads, cfg.hd,
+    )
+    xc = xc + h
+    return xc + mlp(lp["mlp"], rmsnorm(lp["ln2"], xc, cfg.norm_eps), "gelu")
+
+
+def forward_encdec(
+    params: Params, frames: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """Training forward: encode frames, decode tokens with teacher forcing."""
+    enc_out = encode(params, frames, cfg)
+    dt = compute_dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(xc, lp):
+        k, v = cross_attention_kv(lp["xattn"], enc_out, cfg.n_heads, cfg.hd)
+        return _dec_block(lp, xc, positions, k, v, cfg), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int) -> Cache:
+    dt = compute_dtype(cfg.dtype)
+    l = cfg.n_layers
+    return {
+        "position": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((l, batch, cache_len, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((l, batch, cache_len, cfg.n_kv_heads, cfg.hd), dt),
+        "xk": jnp.zeros((l, batch, enc_len, cfg.n_heads, cfg.hd), dt),
+        "xv": jnp.zeros((l, batch, enc_len, cfg.n_heads, cfg.hd), dt),
+    }
+
+
+def prefill_encdec(
+    params: Params, frames: jnp.ndarray, tokens: jnp.ndarray,
+    cfg: ModelConfig, cache_len: int,
+) -> Tuple[jnp.ndarray, Cache]:
+    enc_out = encode(params, frames, cfg)
+    dt = compute_dtype(cfg.dtype)
+    b, t = tokens.shape
+    cache = init_encdec_cache(cfg, b, cache_len, enc_out.shape[1])
+    x = params["embed"][tokens].astype(dt)
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        xk, xv = cross_attention_kv(lp["xattn"], enc_out, cfg.n_heads, cfg.hd)
+        h, ck, cv = attention_prefill(
+            lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions, ck, cv,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+        )
+        xc = xc + h
+        h = cross_attention_forward(
+            lp["xattn"], rmsnorm(lp["ln_x"], xc, cfg.norm_eps),
+            xk, xv, cfg.n_heads, cfg.hd,
+        )
+        xc = xc + h
+        xc = xc + mlp(lp["mlp"], rmsnorm(lp["ln2"], xc, cfg.norm_eps), "gelu")
+        return xc, (ck, cv, xk.astype(dt), xv.astype(dt))
+
+    x, (cache["k"], cache["v"], cache["xk"], cache["xv"]) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"])
+    )
+    cache["position"] = jnp.asarray(t, jnp.int32)
+    x = rmsnorm(params["dec_norm"], x[:, -1:], cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))
+    return logits, cache
+
+
+def decode_step_encdec(
+    params: Params, token: jnp.ndarray, cache: Cache, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Cache]:
+    dt = compute_dtype(cfg.dtype)
+    x = params["embed"][token].astype(dt)
+    pos = cache["position"]
+    new_cache = dict(cache)
+
+    def body(xc, xs):
+        lp, ck, cv, xk, xv = xs
+        h, ck, cv = attention_decode(
+            lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), pos, ck, cv,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+        )
+        xc = xc + h
+        h = cross_attention_forward(
+            lp["xattn"], rmsnorm(lp["ln_x"], xc, cfg.norm_eps),
+            xk, xv, cfg.n_heads, cfg.hd,
+        )
+        xc = xc + h
+        xc = xc + mlp(lp["mlp"], rmsnorm(lp["ln2"], xc, cfg.norm_eps), "gelu")
+        return xc, (ck, cv)
+
+    x, (new_cache["k"], new_cache["v"]) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    new_cache["position"] = pos + 1
+    x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = jnp.dot(x, params["embed"].T.astype(x.dtype))
+    return logits, new_cache

@@ -1,0 +1,36 @@
+"""Modality frontend stubs (assignment: [vlm]/[audio] backbones only).
+
+`input_specs()` provides precomputed patch/frame embeddings; these helpers
+generate deterministic stand-ins for smoke tests and examples, and define
+the split between stub-provided positions and text tokens.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def frontend_split(cfg: ModelConfig, seq_len: int) -> Tuple[int, int]:
+    """(stub_positions, text_tokens) for a combined seq_len."""
+    if cfg.frontend == "vision_stub":
+        n_front = min(cfg.frontend_tokens or seq_len // 2, seq_len - 1)
+        return n_front, seq_len - n_front
+    if cfg.frontend == "audio_stub":
+        # enc-dec: the stub feeds the encoder; decoder sees seq_len tokens
+        return seq_len, seq_len
+    return 0, seq_len
+
+
+def make_stub_embeddings(
+    cfg: ModelConfig, batch: int, n_positions: int, seed: int = 0
+) -> jnp.ndarray:
+    """Deterministic fake patch/frame embeddings [B, N, D]."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(
+        key, (batch, n_positions, cfg.d_model), jnp.float32
+    )

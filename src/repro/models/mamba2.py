@@ -1,0 +1,197 @@
+"""Mamba2 (SSD) block — chunked scan for train/prefill, recurrence for decode.
+
+State-space duality layer (Dao & Gu 2024) with n_groups = 1:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t ⊗ x_t)     h: [B, H, P, N]
+    y_t = C_t · h_t + D ⊙ x_t
+
+Train/prefill uses the chunked algorithm: the sequence is split into
+chunks of length L; within a chunk the recurrence is unrolled into an
+attention-like quadratic form (all in VMEM-sized tiles), and a lax.scan
+passes the [B, H, P, N] state across chunk boundaries. This keeps memory
+at O(B·L·L·H) per chunk instead of O(B·T·H·P·N).
+
+Decode is the pure recurrence — a handful of GEMVs, exactly the PIM
+workload of the paper (zamba2's decode state update runs through
+pim_linear-quantizable projections).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..quant.bitplane import pim_linear
+from .common import Params, dense_init, rmsnorm, rmsnorm_params, split_keys
+
+CHUNK = 256
+
+
+def conv_dim(d_inner: int, n_state: int) -> int:
+    return d_inner + 2 * n_state  # x, B, C share the causal conv
+
+
+def init_mamba2(
+    key, d_model: int, d_inner: int, n_heads: int, n_state: int, d_conv: int = 4
+) -> Params:
+    ks = split_keys(key, 4)
+    cd = conv_dim(d_inner, n_state)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner + 2 * n_state + n_heads),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (d_conv, cd), jnp.float32),
+        "conv_b": jnp.zeros((cd,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01, jnp.float32))),
+        "norm": rmsnorm_params(d_inner),
+        "w_out": dense_init(ks[3], d_inner, d_model),
+    }
+
+
+def _split_proj(proj, d_inner, n_state, n_heads):
+    z, xbc, dt = jnp.split(
+        proj, [d_inner, d_inner + conv_dim(d_inner, n_state)], axis=-1
+    )
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time: xbc [B, T, C], w [K, C]."""
+    k = w.shape[0]
+    pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * w[i][None, None, :].astype(xbc.dtype)
+        for i in range(k)
+    )
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def mamba2_forward(
+    params: Params,
+    u: jnp.ndarray,                 # [B, T, D]
+    *,
+    n_heads: int,
+    n_state: int,
+    d_inner: int,
+    chunk: int = CHUNK,
+    init_state: Optional[jnp.ndarray] = None,   # [B, H, P, N]
+    return_state: bool = False,
+):
+    b, t, _ = u.shape
+    h_heads, n = n_heads, n_state
+    p = d_inner // n_heads
+    proj = pim_linear(u, params["w_in"])
+    z, xbc_raw, dt_raw = _split_proj(proj, d_inner, n, h_heads)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    x, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    x = x.reshape(b, t, h_heads, p)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )                                                # [B, T, H]
+    a = -jnp.exp(params["A_log"])                    # [H]
+
+    lpad = (-t) % chunk
+    if lpad:
+        x = jnp.pad(x, ((0, 0), (0, lpad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, lpad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, lpad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, lpad), (0, 0)))
+    tt = t + lpad
+    nc = tt // chunk
+    xc = x.reshape(b, nc, chunk, h_heads, p).transpose(1, 0, 2, 3, 4)
+    bc = b_in.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    cc = c_in.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h_heads).transpose(1, 0, 2, 3)
+
+    h0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h_heads, p, n), jnp.float32)
+    )
+
+    def body(h_prev, inputs):
+        xk, bk, ck, dtk = inputs           # [B, L, H, P], [B, L, N], ., [B, L, H]
+        ak = dtk * a                        # [B, L, H]
+        cums = jnp.cumsum(ak, axis=1)       # within-chunk log-decay
+        # intra-chunk quadratic form
+        scores = jnp.einsum("bin,bjn->bij", ck, bk)          # [B, L, L]
+        decay = jnp.exp(
+            jnp.clip(cums[:, :, None, :] - cums[:, None, :, :], -60.0, 0.0)
+        )                                                    # [B, i, j, H]
+        causal = jnp.tril(jnp.ones((xk.shape[1], xk.shape[1]), jnp.float32))
+        w = scores[:, :, :, None] * decay * dtk[:, None, :, :] * causal[None, :, :, None]
+        xf = xk.astype(jnp.float32)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xf)
+        # inter-chunk contribution from carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", ck, h_prev) * jnp.exp(
+            jnp.clip(cums, -60.0, 0.0)
+        )[..., None]  # [B, L, H, 1] broadcasts over P
+        yk = y_intra + y_inter
+        # state update
+        tail = jnp.exp(jnp.clip(cums[:, -1:, :] - cums, -60.0, 0.0))  # [B, L, H]
+        dh = jnp.einsum("blh,bln,blhp->bhpn", tail * dtk, bk, xf)
+        h_new = jnp.exp(jnp.clip(cums[:, -1], -60.0, None))[:, :, None, None] * h_prev + dh
+        return h_new, yk
+
+    h_last, ys = jax.lax.scan(body, h0, (xc, bc, cc, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tt, h_heads, p)[:, :t]
+    y = y + params["D"][None, None, :, None] * x[:, :t].astype(jnp.float32)
+    y = y.reshape(b, t, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = pim_linear(y, params["w_out"])
+    if return_state:
+        # conv tail: the raw (pre-conv) inputs the next decode step needs
+        k = params["conv_w"].shape[0]
+        pad_t = max(0, (k - 1) - t)
+        tail = xbc_raw[:, t - (k - 1 - pad_t):]
+        if pad_t:
+            tail = jnp.concatenate(
+                [jnp.zeros(tail.shape[:1] + (pad_t,) + tail.shape[2:], tail.dtype), tail],
+                axis=1,
+            )
+        return out, (h_last, tail)
+    return out
+
+
+def mamba2_decode(
+    params: Params,
+    u: jnp.ndarray,                  # [B, 1, D]
+    state: jnp.ndarray,              # [B, H, P, N] f32
+    conv_state: jnp.ndarray,         # [B, d_conv-1, conv_dim]
+    *,
+    n_heads: int,
+    n_state: int,
+    d_inner: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence. Returns (y, new_state, new_conv_state)."""
+    b = u.shape[0]
+    h_heads, n = n_heads, n_state
+    p = d_inner // n_heads
+    proj = pim_linear(u, params["w_in"])
+    z, xbc, dt_raw = _split_proj(proj, d_inner, n, h_heads)
+    # causal conv against cached tail
+    hist = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], axis=1)
+    k = params["conv_w"].shape[0]
+    window = hist[:, -k:]
+    xbc_t = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), params["conv_w"])
+        + params["conv_b"]
+    )[:, None, :].astype(u.dtype)
+    new_conv = hist[:, -(k - 1):]
+    x, b_in, c_in = jnp.split(xbc_t, [d_inner, d_inner + n], axis=-1)
+    x = x.reshape(b, h_heads, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # [B, H]
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)                                   # [B, H]
+    bf = b_in[:, 0].astype(jnp.float32)                       # [B, N]
+    cf = c_in[:, 0].astype(jnp.float32)
+    new_state = decay[:, :, None, None] * state + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bf, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cf, new_state) + params["D"][None, :, None] * x
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return pim_linear(y, params["w_out"]), new_state, new_conv

@@ -1,0 +1,202 @@
+"""xLSTM cells (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM decode is the purest PIM analogue in the pool: the cell keeps a
+matrix memory C [hd x hd] per head that is rank-1-updated and read with a
+GEMV every step — the same update/readout dataflow as a PIM block row.
+
+Both cells run as lax.scan recurrences (exact; the parallel/chunked forms
+are a recorded perf-iteration lever, see EXPERIMENTS.md §Perf). d_ff = 0
+in the assigned config: there are no separate FFN blocks; the expansion
+lives inside the mLSTM projections (factor ssm_expand).
+
+State pytrees:
+  mLSTM: {"C": [B,H,hd,hd] f32, "n": [B,H,hd] f32, "m": [B,H] f32}
+  sLSTM: {"c","n","h": [B,D] f32, "m": [B,D] f32}
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..quant.bitplane import pim_linear
+from .common import Params, dense_init, split_keys
+
+State = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, expand: int = 2) -> Params:
+    inner = expand * d_model
+    ks = split_keys(key, 6)
+    return {
+        "wq": dense_init(ks[0], d_model, inner),
+        "wk": dense_init(ks[1], d_model, inner),
+        "wv": dense_init(ks[2], d_model, inner),
+        "wi": dense_init(ks[3], d_model, n_heads),
+        "wf": dense_init(ks[3], d_model, n_heads),
+        "wog": dense_init(ks[4], d_model, inner),
+        "w_down": dense_init(ks[5], inner, d_model),
+    }
+
+
+def mlstm_init_state(batch: int, n_heads: int, hd: int) -> State:
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(
+    state: State,
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,   # [B, H, hd]
+    it: jnp.ndarray, ft: jnp.ndarray,                  # [B, H] pre-activations
+) -> Tuple[State, jnp.ndarray]:
+    hd = q.shape[-1]
+    k = k / (hd ** 0.5)
+    log_f = -jax.nn.softplus(-ft)  # log sigmoid(f~): stabilized forget gate
+    m_new = jnp.maximum(log_f + state["m"], it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    c_new = (
+        f_g[..., None, None] * state["C"]
+        + i_g[..., None, None] * (k[..., :, None] * v[..., None, :])
+    )
+    n_new = f_g[..., None] * state["n"] + i_g[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c_new, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), jnp.exp(-m_new)
+    )
+    h = num / den[..., None]
+    return {"C": c_new, "n": n_new, "m": m_new}, h
+
+
+def _mlstm_inputs(params, x, n_heads):
+    b, t, _ = x.shape
+    inner = params["wq"].shape[-1] if not hasattr(params["wq"], "shape") else params["wq"].shape[-1]
+    q = pim_linear(x, params["wq"]).reshape(b, t, n_heads, -1).astype(jnp.float32)
+    k = pim_linear(x, params["wk"]).reshape(b, t, n_heads, -1).astype(jnp.float32)
+    v = pim_linear(x, params["wv"]).reshape(b, t, n_heads, -1).astype(jnp.float32)
+    it = pim_linear(x, params["wi"]).astype(jnp.float32)   # [B, T, H]
+    ft = pim_linear(x, params["wf"]).astype(jnp.float32)
+    og = jax.nn.sigmoid(pim_linear(x, params["wog"]).astype(jnp.float32))
+    return q, k, v, it, ft, og
+
+
+def mlstm_forward(
+    params: Params, x: jnp.ndarray, *, n_heads: int,
+    init_state: State = None, return_state: bool = False,
+):
+    """Recurrent scan over the sequence. x: [B, T, D]."""
+    b, t, d = x.shape
+    q, k, v, it, ft, og = _mlstm_inputs(params, x, n_heads)
+    hd = q.shape[-1]
+    state = init_state if init_state is not None else mlstm_init_state(b, n_heads, hd)
+
+    def body(st, inp):
+        qt, kt, vt, i_t, f_t = inp
+        st2, h = _mlstm_step(st, qt, kt, vt, i_t, f_t)
+        return st2, h
+
+    xs = (
+        q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+        it.transpose(1, 0, 2), ft.transpose(1, 0, 2),
+    )
+    state, hs = jax.lax.scan(body, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, t, n_heads * hd)
+    y = pim_linear((og * h).astype(x.dtype), params["w_down"])
+    if return_state:
+        return y, state
+    return y
+
+
+def mlstm_decode(
+    params: Params, x: jnp.ndarray, state: State, *, n_heads: int
+) -> Tuple[jnp.ndarray, State]:
+    """One-token step. x: [B, 1, D]."""
+    b = x.shape[0]
+    q, k, v, it, ft, og = _mlstm_inputs(params, x, n_heads)
+    state, h = _mlstm_step(
+        state, q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0]
+    )
+    h = h.reshape(b, 1, -1)
+    y = pim_linear((og * h).astype(x.dtype), params["w_down"])
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int) -> Params:
+    hd = d_model // n_heads
+    ks = split_keys(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model),
+        "r_gates": 0.1 * jax.random.normal(ks[1], (n_heads, hd, 4 * hd), jnp.float32),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "w_out": dense_init(ks[2], d_model, d_model),
+    }
+
+
+def slstm_init_state(batch: int, d_model: int) -> State:
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.full((batch, d_model), 1e-6, jnp.float32),
+        "m": jnp.full((batch, d_model), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def _slstm_step(
+    state: State, gx: jnp.ndarray, r_gates: jnp.ndarray, n_heads: int
+) -> Tuple[State, jnp.ndarray]:
+    b, d4 = gx.shape
+    d = d4 // 4
+    hd = d // n_heads
+    hr = state["h"].reshape(b, n_heads, hd)
+    gr = jnp.einsum("bhd,hde->bhe", hr, r_gates).reshape(b, 4 * d)
+    g = gx + gr
+    it, ft, zt, ot = jnp.split(g, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(log_f + state["m"], it)
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_g * state["c"] + i_g * jnp.tanh(zt)
+    n_new = f_g * state["n"] + i_g
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+
+def slstm_forward(
+    params: Params, x: jnp.ndarray, *, n_heads: int,
+    init_state: State = None, return_state: bool = False,
+):
+    b, t, d = x.shape
+    gx = (pim_linear(x, params["w_gates"]) + params["b_gates"].astype(x.dtype)).astype(jnp.float32)
+    state = init_state if init_state is not None else slstm_init_state(b, d)
+
+    def body(st, g):
+        st2, h = _slstm_step(st, g, params["r_gates"], n_heads)
+        return st2, h
+
+    state, hs = jax.lax.scan(body, state, gx.transpose(1, 0, 2))
+    y = pim_linear(hs.transpose(1, 0, 2).astype(x.dtype), params["w_out"])
+    if return_state:
+        return y, state
+    return y
+
+
+def slstm_decode(
+    params: Params, x: jnp.ndarray, state: State, *, n_heads: int
+) -> Tuple[jnp.ndarray, State]:
+    gx = (pim_linear(x, params["w_gates"]) + params["b_gates"].astype(x.dtype)).astype(jnp.float32)
+    state, h = _slstm_step(state, gx[:, 0], params["r_gates"], n_heads)
+    y = pim_linear(h[:, None, :].astype(x.dtype), params["w_out"])
+    return y, state

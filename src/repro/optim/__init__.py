@@ -1,0 +1,18 @@
+"""Optimizers, schedules, gradient compression."""
+
+from .adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from .compress import compressed_psum, init_residual
+from .schedule import linear_warmup_constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "global_norm", "compressed_psum",
+    "init_residual", "linear_warmup_constant", "warmup_cosine",
+]

@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm clipping, bf16-safe.
+
+Self-contained (no optax in this environment). State is a pytree shaped
+like the params (m, v in f32) so it shards with the same partition specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Params
+    v: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def _is_decayable(path: str, leaf) -> bool:
+    """Decay projection kernels + embeddings; not norms/biases."""
+    name = path.split("/")[-1]
+    return getattr(leaf, "ndim", 0) >= 2 and not name.startswith(("g", "b_"))
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out[k] = _tree_paths(v, f"{prefix}/{k}" if prefix else k)
+        return out
+    return prefix
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * factor.astype(g.dtype), grads), norm
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros,
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    )
+
+
+def adamw_update(
+    grads: Params,
+    state: AdamWState,
+    params: Params,
+    cfg: AdamWConfig,
+    lr: Optional[jnp.ndarray] = None,
+) -> Tuple[Params, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    paths = _tree_paths(params)
+
+    def upd(g, m, v, p, path):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _is_decayable(path, p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr_t * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params, paths)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

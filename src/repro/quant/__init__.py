@@ -1,0 +1,5 @@
+"""Bit-plane quantization containers (the PIM-resident weight format)."""
+
+from .bitplane import PimQuantConfig, PimWeight, pim_linear, quantize_tree
+
+__all__ = ["PimQuantConfig", "PimWeight", "pim_linear", "quantize_tree"]

@@ -1,0 +1,3 @@
+from .engine import ServeConfig, ServeEngine
+from .scheduler import ContinuousBatcher, Request
+__all__ = ["ServeConfig", "ServeEngine", "ContinuousBatcher", "Request"]

@@ -1,0 +1,112 @@
+"""Continuous-batching request scheduler (slot-based).
+
+A fixed decode batch of `n_slots`; finished sequences release their slot
+and a queued request is prefilled into it (batch-dim insert into the live
+cache). One decode step always advances every active slot — the engine
+never idles while requests are queued, which keeps the decode GEMV batch
+(the paper's workload) full.
+
+Limitation (documented): the cache keeps one global write position, so
+all requests must share a (padded) prompt length and slots refilled after
+tick 0 write their KV at the global offset. Per-slot position tracking
+(paged-attention style) is a recorded extension in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray          # [T] int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+def _insert_batch(cache_tree, slot_tree, idx: int):
+    """Write a batch-1 cache into slot `idx` of a batch-N cache."""
+    def ins(full, one):
+        if getattr(full, "ndim", 0) == 0 or full.ndim == getattr(one, "ndim", 0) - 1:
+            return full  # scalars (position) stay global
+        # batch axis: attn caches [L, B, ...], recurrent states [L, B, ...]
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), idx, axis=1)
+
+    out = {}
+    for k in cache_tree:
+        if k == "position":
+            out[k] = cache_tree[k]
+        else:
+            out[k] = ins(cache_tree[k], slot_tree[k])
+    return out
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params: Any, n_slots: int,
+                 cache_len: int, prompt_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.prompt_len = prompt_len
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.cache = init_cache(cfg, n_slots, cache_len)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.finished: Dict[int, List[int]] = {}
+        self._prefill1 = jax.jit(
+            lambda p, t: prefill(p, t, cfg, cache_len=cache_len)
+        )
+        self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                logits, c1 = self._prefill1(self.params, req.prompt[None, :])
+                self.cache = _insert_batch(self.cache, c1, i)
+                nxt = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(nxt)
+                self.tokens = self.tokens.at[i, 0].set(nxt)
+                self.slots[i] = req
+
+    def step(self) -> int:
+        """One scheduler tick: fill free slots, decode once. Returns the
+        number of active slots advanced."""
+        self._fill_slots()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(self.params, self.tokens, self.cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(nxt[i]))
+            if req.done:
+                self.finished[req.uid] = req.generated
+                self.slots[i] = None
+        self.tokens = nxt[:, None]
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

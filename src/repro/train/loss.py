@@ -1,0 +1,29 @@
+"""LM loss: cross-entropy + z-loss + MoE auxiliary terms."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray,     # [B, T, V]
+    targets: jnp.ndarray,    # [B, T] int
+    z_loss_coef: float = 1e-4,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss_coef * jnp.square(lse)
+    loss = jnp.mean(nll + zl)
+    metrics = {
+        "nll": jnp.mean(nll),
+        "z_loss": jnp.mean(zl),
+        "accuracy": jnp.mean(
+            (jnp.argmax(lf, axis=-1) == targets).astype(jnp.float32)
+        ),
+    }
+    return loss, metrics

@@ -1,0 +1,99 @@
+"""train_step factory: loss + grad + AdamW, with microbatch accumulation.
+
+The returned step is jit-compatible and sharding-agnostic: parallelism
+comes from the in/out shardings the launcher attaches (params sharded per
+dist.sharding rules, batch over (pod, data)). XLA SPMD inserts the
+gradient all-reduce; the explicit compressed-pod-axis variant lives in
+optim.compress and is exercised by the dist tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import forward, forward_encdec
+from ..optim import AdamWConfig, AdamWState, adamw_update
+from ..optim.schedule import warmup_cosine
+from .loss import softmax_cross_entropy
+
+Batch = Dict[str, jnp.ndarray]
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch: Batch):
+        if cfg.is_encoder_decoder:
+            logits, aux = forward_encdec(params, batch["frames"], batch["tokens"], cfg)
+        elif cfg.frontend == "vision_stub":
+            logits, aux = forward(
+                params, batch["tokens"], cfg, extra_embeds=batch["patches"]
+            )
+            logits = logits[:, batch["patches"].shape[1]:]
+        else:
+            logits, aux = forward(params, batch["tokens"], cfg)
+        loss, metrics = softmax_cross_entropy(logits, batch["targets"])
+        loss = loss + cfg.router_aux_coef * aux["moe_aux"]
+        metrics["moe_aux"] = aux["moe_aux"]
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    n_microbatches: int = 1,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split_micro(batch: Batch) -> Batch:
+        return jax.tree.map(
+            lambda x: x.reshape((n_microbatches, x.shape[0] // n_microbatches) + x.shape[1:]),
+            batch,
+        )
+
+    def train_step(
+        params, opt_state: AdamWState, batch: Batch
+    ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+        if n_microbatches > 1:
+            micro = split_micro(batch)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc_g, acc_m = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, grads)
+                acc_m = jax.tree.map(jnp.add, acc_m, metrics)
+                return (acc_g, acc_m), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            zero_m = {
+                k: jnp.zeros((), jnp.float32)
+                for k in ("loss", "nll", "z_loss", "accuracy", "moe_aux")
+            }
+            (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / n_microbatches, metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        lr = warmup_cosine(opt_state.step, opt_cfg.lr, warmup_steps, total_steps)
+        params2, opt_state2, gnorm = adamw_update(
+            grads, opt_state, params, opt_cfg, lr=lr
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params2, opt_state2, metrics
+
+    return train_step

@@ -1,0 +1,24 @@
+"""Shared test config.
+
+IMPORTANT: no XLA_FLAGS / device-count overrides here — unit tests run on
+the single real CPU device. Multi-device behaviour is tested via
+subprocesses (tests/test_dist_subprocess.py) so the device count never
+leaks into this process.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,152 @@
+"""Block-level equivalences: chunked vs dense attention, mamba2 chunked
+vs recurrent, mLSTM/sLSTM forward vs decode loop, MoE invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as A
+from repro.models.attention import _chunked_gqa, _gqa_core
+from repro.models.common import NEG_INF, rmsnorm_params
+from repro.models.mamba2 import init_mamba2, mamba2_decode, mamba2_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.models.xlstm import (
+    init_mlstm,
+    init_slstm,
+    mlstm_decode,
+    mlstm_forward,
+    mlstm_init_state,
+    slstm_decode,
+    slstm_forward,
+    slstm_init_state,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("window,causal", [(None, True), (8, True), (None, False)])
+def test_chunked_attention_matches_dense(rng, window, causal):
+    B, T, H, KV, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    win = None if window is None else jnp.int32(window)
+    if causal:
+        ok = pos[None, :] <= pos[:, None]
+        if win is not None:
+            ok = ok & (pos[None, :] > pos[:, None] - win)
+        mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None]
+    else:
+        mask = None
+    dense = _gqa_core(q, k, v, mask)
+    old = (A.Q_BLOCK, A.KV_BLOCK)
+    A.Q_BLOCK, A.KV_BLOCK = 16, 16
+    try:
+        chunked = _chunked_gqa(q, k, v, pos, pos, win, causal)
+    finally:
+        A.Q_BLOCK, A.KV_BLOCK = old
+    np.testing.assert_allclose(
+        np.asarray(dense), np.asarray(chunked), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mamba2_chunked_matches_recurrent(rng):
+    """Chunked SSD forward == step-by-step decode recurrence."""
+    D, H, N, d_inner = 16, 4, 8, 32
+    params = init_mamba2(KEY, D, d_inner, H, N)
+    B, T = 2, 12
+    u = jnp.asarray(0.5 * rng.normal(size=(B, T, D)), jnp.float32)
+    y_chunked = mamba2_forward(
+        params, u, n_heads=H, n_state=N, d_inner=d_inner, chunk=4
+    )
+    # recurrent: run decode token by token
+    state = jnp.zeros((B, H, d_inner // H, N), jnp.float32)
+    conv = jnp.zeros((B, 3, d_inner + 2 * N), jnp.float32)
+    outs = []
+    for t in range(T):
+        y, state, conv = mamba2_decode(
+            params, u[:, t : t + 1], state, conv,
+            n_heads=H, n_state=N, d_inner=d_inner,
+        )
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_chunked, np.float32), np.asarray(y_rec, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_mamba2_chunk_size_invariance(rng):
+    D, H, N, d_inner = 16, 4, 8, 32
+    params = init_mamba2(KEY, D, d_inner, H, N)
+    u = jnp.asarray(0.5 * rng.normal(size=(1, 16, D)), jnp.float32)
+    y4 = mamba2_forward(params, u, n_heads=H, n_state=N, d_inner=d_inner, chunk=4)
+    y16 = mamba2_forward(params, u, n_heads=H, n_state=N, d_inner=d_inner, chunk=16)
+    np.testing.assert_allclose(
+        np.asarray(y4, np.float32), np.asarray(y16, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_mlstm_forward_matches_decode_loop(rng):
+    D, H = 16, 2
+    params = init_mlstm(KEY, D, H)
+    B, T = 2, 10
+    x = jnp.asarray(0.5 * rng.normal(size=(B, T, D)), jnp.float32)
+    y_fwd = mlstm_forward(params, x, n_heads=H)
+    hd = 2 * D // H
+    state = mlstm_init_state(B, H, hd)
+    outs = []
+    for t in range(T):
+        y, state = mlstm_decode(params, x[:, t : t + 1], state, n_heads=H)
+        outs.append(y)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_fwd, np.float32), np.asarray(y_dec, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_slstm_forward_matches_decode_loop(rng):
+    D, H = 16, 2
+    params = init_slstm(KEY, D, H)
+    B, T = 2, 10
+    x = jnp.asarray(0.5 * rng.normal(size=(B, T, D)), jnp.float32)
+    y_fwd = slstm_forward(params, x, n_heads=H)
+    state = slstm_init_state(B, D)
+    outs = []
+    for t in range(T):
+        y, state = slstm_decode(params, x[:, t : t + 1], state, n_heads=H)
+        outs.append(y)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_fwd, np.float32), np.asarray(y_dec, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_moe_routing_invariants(rng):
+    D, F, E = 16, 32, 4
+    params = init_moe(KEY, D, F, E)
+    x = jnp.asarray(rng.normal(size=(2, 8, D)), jnp.float32)
+    y, aux = moe_forward(params, x, top_k=2, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert jnp.isfinite(aux["load_balance_loss"])
+    # generous capacity -> no drops
+    assert float(aux["dropped_fraction"]) == pytest.approx(0.0, abs=1e-6)
+    # tight capacity -> some drops, still finite output
+    y2, aux2 = moe_forward(params, x, top_k=2, capacity_factor=0.25)
+    assert bool(jnp.all(jnp.isfinite(y2)))
+    assert float(aux2["dropped_fraction"]) > 0.0
+
+
+def test_moe_shared_expert_contributes(rng):
+    D, F, E = 16, 32, 4
+    params = init_moe(KEY, D, F, E, n_shared=1)
+    x = jnp.asarray(rng.normal(size=(1, 4, D)), jnp.float32)
+    y, _ = moe_forward(params, x, top_k=1, capacity_factor=1.0)
+    p2 = dict(params)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, params["shared"])
+    y2, _ = moe_forward(p2, x, top_k=1, capacity_factor=1.0)
+    assert float(jnp.max(jnp.abs(y - y2))) > 1e-6

@@ -1,0 +1,87 @@
+"""IMAGine GEMV engine: bit-exactness, cycle model, Table IX reproduction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gemv_engine import ImagineConfig, ImagineGemv, reduction_model_cycles
+from repro.core.gold_standard import GoldRange, fit_reduction_model
+
+
+def small_engine(n_bits=8):
+    return ImagineGemv(
+        ImagineConfig(rows=2, cols=4, lanes=4, depth=256, n_bits=n_bits,
+                      acc_bits=24)
+    )
+
+
+def test_gemv_exact_and_cycle_model(rng):
+    eng = small_engine()
+    for m, d in [(2, 4), (5, 16), (8, 32), (3, 8)]:
+        w = rng.integers(-128, 128, size=(m, d))
+        x = rng.integers(-128, 128, size=(d,))
+        y, cycles = eng.run_gemv(w, x)
+        assert np.array_equal(y, w @ x), (m, d)
+        assert cycles == eng.analytic_cycles(m, d)
+
+
+@settings(max_examples=8)
+@given(
+    m=st.integers(1, 6),
+    d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_gemv_exact_property(m, d, seed):
+    rng = np.random.default_rng(seed)
+    eng = small_engine()
+    w = rng.integers(-128, 128, size=(m, d))
+    x = rng.integers(-128, 128, size=(d,))
+    y, _ = eng.run_gemv(w, x)
+    assert np.array_equal(y, w @ x)
+
+
+def test_gemv_4bit(rng):
+    eng = ImagineGemv(
+        ImagineConfig(rows=2, cols=2, lanes=4, depth=128, n_bits=4, acc_bits=16)
+    )
+    w = rng.integers(-8, 8, size=(4, 8))
+    x = rng.integers(-8, 8, size=(8,))
+    y, _ = eng.run_gemv(w, x)
+    assert np.array_equal(y, w @ x)
+
+
+def test_rf_capacity_guard():
+    eng = small_engine()
+    with pytest.raises(ValueError, match="does not fit"):
+        eng.plan(4, 100_000)
+
+
+def test_range_guard(rng):
+    eng = small_engine()
+    w = np.full((2, 4), 200)  # out of int8 range
+    with pytest.raises(ValueError, match="out of"):
+        eng.run_gemv(w, np.zeros(4, np.int64))
+
+
+def test_table_ix_reproduction():
+    """Curve-fit of eqn (1) on IMAGine's reduction model must land near the
+    paper's Table IX row: a=1.2, b=0.9, c=143 (32-bit accumulation)."""
+    fit = fit_reduction_model(
+        lambda n, p: reduction_model_cycles(n, p, k=16), n_bits=32
+    )
+    assert 1.0 <= fit.a <= 1.3, fit
+    assert 0.7 <= fit.b <= 1.1, fit
+    assert 130 <= fit.c <= 160, fit
+    interp = fit.interpretation()
+    assert interp["in_gold_range"] == "True"
+    assert interp["addition"] == "Standard"
+    assert interp["movement"] == "Standard"
+
+
+def test_reduction_cycles_definition():
+    """reduction_cycles = total - multiplication stage (§V-G)."""
+    eng = small_engine()
+    m, d = 4, 16
+    total = eng.analytic_cycles(m, d)
+    red = eng.reduction_cycles(m, d)
+    assert 0 < red < total

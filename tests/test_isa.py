@@ -1,0 +1,57 @@
+"""ISA: encode/decode roundtrip, driver classification, cycle costs."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.isa import (
+    ADDR_MASK,
+    IMM_MASK,
+    INSTR_BITS,
+    OP_PARAMS_LOAD_CYCLES,
+    Instr,
+    Op,
+    assemble,
+    cycle_cost,
+)
+
+
+@given(
+    op=st.sampled_from(list(Op)),
+    addr1=st.integers(0, ADDR_MASK),
+    addr2=st.integers(0, ADDR_MASK),
+    imm=st.integers(0, IMM_MASK),
+)
+def test_encode_decode_roundtrip(op, addr1, addr2, imm):
+    instr = Instr(op, addr1, addr2, imm)
+    word = instr.encode()
+    assert 0 <= word < (1 << INSTR_BITS)
+    assert Instr.decode(word) == instr
+
+
+def test_encode_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        Instr(Op.ADD, addr1=1 << 10).encode()
+    with pytest.raises(ValueError):
+        Instr(Op.ADD, imm=32).encode()
+
+
+def test_single_cycle_ops_cost_one():
+    for op in (Op.NOP, Op.SETPTR, Op.SELALL, Op.SETPREC, Op.END):
+        assert cycle_cost(Instr(op), n_bits=8, acc_bits=24) == 1
+
+
+def test_multicycle_costs():
+    n, a = 8, 24
+    assert cycle_cost(Instr(Op.ADD), n, a) == 2 * a + OP_PARAMS_LOAD_CYCLES
+    assert cycle_cost(Instr(Op.MULT), n, a) == 4 * n * (n + 1) + 1
+    assert cycle_cost(Instr(Op.FOLD, imm=0), n, a) == a + 4 + 1
+    # HOP level h adds 2^h movement cycles (binary hopping)
+    c0 = cycle_cost(Instr(Op.HOP, imm=0), n, a)
+    c3 = cycle_cost(Instr(Op.HOP, imm=3), n, a)
+    assert c3 - c0 == (1 << 3) - 1
+
+
+def test_assemble_roundtrip():
+    prog = [Instr(Op.SETPREC, imm=8), Instr(Op.MACC, 0, 64), Instr(Op.END)]
+    words = assemble(prog)
+    assert [Instr.decode(w) for w in words] == prog

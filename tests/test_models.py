@@ -1,0 +1,159 @@
+"""Per-arch smoke tests (deliverable f): reduced configs, one forward +
+train-grad + prefill/decode consistency on CPU; output shapes + no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (
+    decode_step,
+    decode_step_encdec,
+    forward,
+    forward_encdec,
+    init_encdec,
+    init_lm,
+    prefill,
+    prefill_encdec,
+)
+from repro.models.frontend_stub import make_stub_embeddings
+
+KEY = jax.random.PRNGKey(0)
+B, T = 2, 16
+
+
+def _setup(arch):
+    cfg = get_config(arch, smoke=True)
+    init = init_encdec if cfg.is_encoder_decoder else init_lm
+    params = init(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    extra = None
+    if cfg.frontend == "vision_stub":
+        extra = make_stub_embeddings(cfg, B, min(cfg.frontend_tokens, 8))
+    if cfg.is_encoder_decoder:
+        extra = make_stub_embeddings(cfg, B, T)
+    return cfg, params, toks, extra
+
+
+def _finite(x):
+    return bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params, toks, extra = _setup(arch)
+    if cfg.is_encoder_decoder:
+        logits, aux = jax.jit(lambda p: forward_encdec(p, extra, toks, cfg))(params)
+        t_expect = T
+    else:
+        logits, aux = jax.jit(lambda p: forward(p, toks, cfg, extra))(params)
+        t_expect = T + (extra.shape[1] if extra is not None else 0)
+    assert logits.shape == (B, t_expect, cfg.vocab_size)
+    assert _finite(logits)
+    assert _finite(aux["moe_aux"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_gradient_finite(arch):
+    cfg, params, toks, extra = _setup(arch)
+
+    def loss(p):
+        if cfg.is_encoder_decoder:
+            logits, _ = forward_encdec(p, extra, toks, cfg)
+        else:
+            logits, _ = forward(p, toks, cfg, extra)
+        return jnp.mean(jax.nn.log_softmax(logits.astype(jnp.float32))[..., 0])
+
+    g = jax.jit(jax.grad(loss))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(_finite(l) for l in leaves)
+    assert any(float(jnp.max(jnp.abs(l))) > 0 for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_matches_forward_and_decode_runs(arch):
+    cfg, params, toks, extra = _setup(arch)
+    if cfg.is_encoder_decoder:
+        fl, _ = jax.jit(lambda p: forward_encdec(p, extra, toks, cfg))(params)
+        lp, cache = jax.jit(
+            lambda p: prefill_encdec(p, extra, toks, cfg, cache_len=T + 4)
+        )(params)
+        stepper = decode_step_encdec
+    else:
+        fl, _ = jax.jit(lambda p: forward(p, toks, cfg, extra))(params)
+        t_total = T + (extra.shape[1] if extra is not None else 0)
+        lp, cache = jax.jit(
+            lambda p: prefill(p, toks, cfg, cache_len=t_total + 4, extra_embeds=extra)
+        )(params)
+        stepper = decode_step
+    # prefill last-position logits == forward last-position logits
+    np.testing.assert_allclose(
+        np.asarray(lp[:, -1], np.float32), np.asarray(fl[:, -1], np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+    nxt = jnp.argmax(lp[:, -1:], -1).astype(jnp.int32)
+    ld, cache2 = jax.jit(lambda p, t, c: stepper(p, t, c, cfg))(params, nxt, cache)
+    assert ld.shape == (B, 1, cfg.vocab_size)
+    assert _finite(ld)
+    assert int(cache2["position"]) == int(cache["position"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma3-27b", "zamba2-1.2b",
+                                  "xlstm-350m"])
+def test_decode_matches_forward_teacher_forcing(arch):
+    """Decoding tokens one-by-one reproduces full-forward logits at each
+    position (KV-cache/state correctness)."""
+    cfg, params, toks, _ = _setup(arch)
+    full_logits, _ = jax.jit(lambda p: forward(p, toks, cfg))(params)
+    # prefill on the first half, then feed the ground-truth second half
+    half = T // 2
+    lp, cache = jax.jit(
+        lambda p: prefill(p, toks[:, :half], cfg, cache_len=T + 2)
+    )(params)
+    np.testing.assert_allclose(
+        np.asarray(lp[:, -1], np.float32),
+        np.asarray(full_logits[:, half - 1], np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+    step = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+    for i in range(half, T):
+        ld, cache = step(params, toks[:, i : i + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(ld[:, 0], np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            rtol=3e-2, atol=3e-2,
+        )
+
+
+def test_window_schedule_gemma():
+    cfg = get_config("gemma3-27b")
+    ws = cfg.window_schedule(32768)
+    assert len(ws) == 62
+    assert ws[5] == 32768 and ws[0] == 1024  # 5 local then 1 global
+    assert sum(1 for w in ws if w == 32768) == 10  # layers 5,11,...,59
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned numbers."""
+    rows = {
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }
+    for arch, (nl, dm, nh, kv, ff, vs) in rows.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (nl, dm, nh, kv, ff, vs), (arch, got)
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").top_k == 2
+    assert get_config("llama4-scout-17b-a16e").top_k == 1

@@ -1,0 +1,105 @@
+"""Bit-exact PIM array semantics vs host integer arithmetic (hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.isa import Instr, Op
+from repro.core.pim_array import ArrayGeometry, PimArray
+
+
+def make_array(depth=128, lanes=4, rows=1, cols=2):
+    return PimArray(ArrayGeometry(rows, cols, lanes, depth))
+
+
+vals8 = st.integers(-128, 127)
+
+
+@given(a=vals8, b=vals8)
+def test_bit_serial_add(a, b):
+    arr = make_array()
+    arr.n_bits, arr.acc_bits = 8, 16
+    arr.host_write(0, 0, 0, 0, a, 16)
+    arr.host_write(0, 0, 0, 16, b, 16)
+    arr.execute([Instr(Op.SETPTR, addr1=32), Instr(Op.ADD, addr1=0, addr2=16)])
+    assert arr.host_read(0, 0, 0, 32, 16) == a + b
+
+
+@given(a=vals8, b=vals8)
+def test_bit_serial_sub(a, b):
+    arr = make_array()
+    arr.n_bits, arr.acc_bits = 8, 16
+    arr.host_write(0, 0, 0, 0, a, 16)
+    arr.host_write(0, 0, 0, 16, b, 16)
+    arr.execute([Instr(Op.SETPTR, addr1=32), Instr(Op.SUB, addr1=0, addr2=16)])
+    assert arr.host_read(0, 0, 0, 32, 16) == a - b
+
+
+@given(a=vals8, b=vals8)
+def test_booth_multiply(a, b):
+    arr = make_array()
+    arr.n_bits, arr.acc_bits = 8, 24
+    arr.host_write(0, 0, 0, 0, a, 8)
+    arr.host_write(0, 0, 0, 8, b, 8)
+    arr.execute([Instr(Op.SETPTR, addr1=32), Instr(Op.MULT, addr1=0, addr2=8)])
+    assert arr.host_read(0, 0, 0, 32, 24) == a * b
+
+
+@given(a=vals8, b=vals8, c=vals8, d=vals8)
+def test_macc_accumulates(a, b, c, d):
+    arr = make_array()
+    arr.n_bits, arr.acc_bits = 8, 24
+    arr.host_write(0, 0, 0, 0, a, 8)
+    arr.host_write(0, 0, 0, 8, b, 8)
+    arr.host_write(0, 0, 0, 16, c, 8)
+    arr.host_write(0, 0, 0, 24, d, 8)
+    arr.execute([
+        Instr(Op.SETPTR, addr1=32),
+        Instr(Op.SUB, addr1=32, addr2=32),  # clear
+        Instr(Op.MACC, addr1=0, addr2=8),
+        Instr(Op.MACC, addr1=16, addr2=24),
+    ])
+    assert arr.host_read(0, 0, 0, 32, 24) == a * b + c * d
+
+
+def test_fold_reduces_lanes():
+    arr = make_array(lanes=4, cols=1)
+    arr.n_bits, arr.acc_bits = 8, 16
+    vals = [3, -7, 11, 19]
+    for lane, v in enumerate(vals):
+        arr.host_write(0, 0, lane, 0, v, 16)
+    arr.execute([Instr(Op.SETPTR, addr1=0), Instr(Op.FOLD, imm=0), Instr(Op.FOLD, imm=1)])
+    assert arr.host_read(0, 0, 0, 0, 16) == sum(vals)
+
+
+def test_hop_reduces_block_columns():
+    arr = make_array(cols=4, lanes=2)
+    arr.n_bits, arr.acc_bits = 8, 16
+    vals = [5, -3, 8, 2]
+    for col, v in enumerate(vals):
+        arr.host_write(0, col, 0, 0, v, 16)
+    arr.execute([Instr(Op.SETPTR, addr1=0), Instr(Op.HOP, imm=0), Instr(Op.HOP, imm=1)])
+    assert arr.host_read(0, 0, 0, 0, 16) == sum(vals)
+
+
+def test_block_enable_masks_writes():
+    arr = make_array(cols=2)
+    arr.n_bits, arr.acc_bits = 8, 16
+    arr.host_write(0, 0, 0, 0, 1, 16)
+    arr.host_write(0, 1, 0, 0, 1, 16)
+    # enable only block (0, 1): block id = row*cols + col = 1
+    arr.execute([
+        Instr(Op.SELBLK, imm=1),
+        Instr(Op.SETPTR, addr1=16),
+        Instr(Op.ADD, addr1=0, addr2=0),
+        Instr(Op.SELALL),
+    ])
+    assert arr.host_read(0, 1, 0, 16, 16) == 2
+    assert arr.host_read(0, 0, 0, 16, 16) == 0  # masked out
+
+
+def test_geometry_validation():
+    with pytest.raises(ValueError):
+        PimArray(ArrayGeometry(1, 3, 4, 64))  # non-pow2 cols
+    with pytest.raises(ValueError):
+        PimArray(ArrayGeometry(1, 2, 5, 64))  # non-pow2 lanes

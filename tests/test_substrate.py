@@ -1,0 +1,200 @@
+"""Substrate: optimizer, schedules, data pipeline, checkpointing, quant."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.ckpt import CheckpointManager
+from repro.data.synthetic import DataConfig, batch_at, host_shard
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+from repro.quant.bitplane import PimQuantConfig, PimWeight, pim_linear, quantize_tree
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      clip_norm=1e9)
+    params = {"w_k": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    grads = {"w_k": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    state = adamw_init(params)
+    p1, state, _ = adamw_update(grads, state, params, cfg)
+    g = np.asarray(grads["w_k"])
+    m = 0.1 * g
+    v = 0.01 * g**2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    expect = np.asarray(params["w_k"]) - 0.1 * (mhat / (np.sqrt(vhat) + 1e-8))
+    np.testing.assert_allclose(np.asarray(p1["w_k"]), expect, rtol=1e-5)
+
+
+def test_weight_decay_applies_to_kernels_not_norms():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=1e9)
+    params = {"w_k": jnp.ones((2, 2)), "g": jnp.ones((2,))}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    state = adamw_init(params)
+    p1, _, _ = adamw_update(grads, state, params, cfg)
+    assert float(p1["w_k"][0, 0]) < 1.0   # decayed
+    assert float(p1["g"][0]) == 1.0       # not decayed
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=1e9)
+    params = {"w_k": jnp.asarray([5.0, -5.0])[None, :]}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w_k": 2 * params["w_k"]}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w_k"]))) < 0.1
+
+
+def test_warmup_cosine_shape():
+    lr0 = warmup_cosine(jnp.asarray(0), 1.0, 10, 100)
+    lr10 = warmup_cosine(jnp.asarray(10), 1.0, 10, 100)
+    lr100 = warmup_cosine(jnp.asarray(100), 1.0, 10, 100)
+    assert float(lr0) == 0.0
+    assert float(lr10) == pytest.approx(1.0)
+    assert float(lr100) == pytest.approx(0.1, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+@given(step=st.integers(0, 1000))
+def test_batch_determinism(step):
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4)
+    a1, b1 = batch_at(cfg, step)
+    a2, b2 = batch_at(cfg, step)
+    assert np.array_equal(a1, a2) and np.array_equal(b1, b2)
+    assert a1.shape == (4, 8) and a1.min() >= 0 and a1.max() < 100
+
+
+def test_targets_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+    toks, tgts = batch_at(cfg, 3)
+    assert np.array_equal(toks[:, 1:], tgts[:, :-1])
+
+
+def test_host_shard_partitions():
+    cfg = DataConfig(vocab_size=50, seq_len=4, global_batch=8)
+    toks, _ = batch_at(cfg, 0)
+    parts = [host_shard(toks, i, 4) for i in range(4)]
+    assert np.array_equal(np.concatenate(parts), toks)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(x=1.0):
+    return {"params": {"w_k": jnp.full((4, 4), x)}, "step": jnp.asarray(7)}
+
+
+def test_ckpt_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(10, _state(3.0))
+        restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, _state()))
+        assert step == 10
+        assert float(restored["params"]["w_k"][0, 0]) == 3.0
+
+
+def test_ckpt_keep_n_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep_n=2)
+        for s in (10, 20, 30, 40):
+            mgr.save(s, _state(float(s)))
+        man = mgr.manifest()
+        assert man["latest"] == 40
+        assert man["steps"] == [30, 40]
+        assert not os.path.exists(os.path.join(d, "step_00000010"))
+
+
+def test_ckpt_crash_safety():
+    """A stale tmp dir (simulated crash) never corrupts the manifest."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(10, _state(1.0))
+        os.makedirs(os.path.join(d, "step_00000020.tmp"))  # crashed write
+        assert mgr.latest_step() == 10
+        restored, step = mgr.restore(_state())
+        assert step == 10
+
+
+def test_ckpt_async_save():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save_async(5, _state(2.0))
+        mgr.wait()
+        _, step = mgr.restore(_state())
+        assert step == 5
+
+
+def test_ckpt_restores_pim_weights():
+    """PimWeight leaves (planes + scale) round-trip through checkpoints."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)), jnp.float32)
+    tree = {"layer": {"wq": w}}
+    q = quantize_tree(tree, PimQuantConfig(n_bits=8, min_features=1))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, q)
+        restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, q))
+        assert isinstance(restored["layer"]["wq"], PimWeight)
+        assert jnp.array_equal(restored["layer"]["wq"].planes,
+                               q["layer"]["wq"].planes)
+
+
+# ---------------------------------------------------------------------------
+# quantized linear containers
+# ---------------------------------------------------------------------------
+
+def test_pim_weight_through_jit_and_scan(rng):
+    ws = jnp.asarray(rng.normal(size=(3, 16, 8)), jnp.float32)  # stacked [L,K,M]
+    pw = PimWeight.from_dense(ws, PimQuantConfig(n_bits=8))
+    x = jnp.asarray(rng.normal(size=(2, 16)), jnp.float32)
+
+    @jax.jit
+    def run(pw, x):
+        def body(carry, w_l):
+            return carry + pim_linear(x, w_l, impl="ref").sum(), ()
+        out, _ = jax.lax.scan(body, 0.0, pw)
+        return out
+
+    got = run(pw, x)
+    expect = sum(float((x @ ws[i]).sum()) for i in range(3))
+    assert float(got) == pytest.approx(expect, rel=0.05)
+
+
+def test_quantize_tree_skips_small_and_norms(rng):
+    tree = {
+        "wq": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+        "g": jnp.ones((16,)),
+        "bq": jnp.zeros((16,)),
+        "wsmall": jnp.ones((2, 2)),
+    }
+    q = quantize_tree(tree, PimQuantConfig(n_bits=8, min_features=8))
+    assert isinstance(q["wq"], PimWeight)
+    assert not isinstance(q["wsmall"], PimWeight)
+    assert not isinstance(q["g"], PimWeight)
