@@ -1,0 +1,18 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench serve-demo
+
+# tier-1 verify (ROADMAP): full suite, stop on first failure
+test:
+	python -m pytest -x -q
+
+# skip the slow multi-device subprocess dry-runs
+test-fast:
+	python -m pytest -x -q -m "not slow" --ignore=tests/test_dist_subprocess.py
+
+bench:
+	python -m benchmarks.run
+
+serve-demo:
+	python -m repro.launch.serve --paged --requests 8 --slots 4 --new-tokens 8

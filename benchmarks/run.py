@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   kernel/*    TPU adaptation: bit-plane GEMV bandwidth amplification
   reduction/* collective schedule byte models
   roofline/*  per-cell roofline terms from the dry-run artifacts
+  serve/*     continuous-batching throughput, dense vs paged KV cache
 """
 
 from __future__ import annotations
@@ -34,12 +35,13 @@ def main() -> None:
         table9_curvefit,
     )
     from .roofline_bench import roofline_bench
+    from .serve_bench import serve_bench
 
     sections = [
         table1_frequency, fig1_scaling, table4_reduction, table5_utilization,
         fig5_scalability, table8_systems, fig7_gemv,
         fig7_simulator_validation, table9_curvefit, kernel_bench,
-        reduction_schedule_bench, roofline_bench,
+        reduction_schedule_bench, roofline_bench, serve_bench,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -7,6 +7,28 @@ Compares dense vs 8-bit bit-serial (group=1) vs 8-bit slice4-style
 fraction / HBM-byte reduction that sets decode speed on the target TPU.
 
 Run:  PYTHONPATH=src python examples/serve_pim_gemv.py
+
+Quickstart — paged serving (DESIGN.md §8). The block-paged KV cache
+lifts the dense cache's shared-prompt-length restriction: requests with
+different (unpadded) prompt lengths batch together, slots refill at any
+tick, and finished requests' pages recycle through a free list.
+
+    from repro.serve import ContinuousBatcher, Request, ServeConfig, ServeEngine
+
+    # batch engine: flip ServeConfig.paged (dense path stays the default)
+    eng = ServeEngine(cfg, params, ServeConfig(max_new_tokens=8, paged=True,
+                                               block_size=16))
+    tokens = eng.generate(prompts)           # same greedy tokens as dense
+
+    # continuous batching over ragged prompts (no prompt_len needed)
+    cb = ContinuousBatcher(cfg, params, n_slots=4, cache_len=64,
+                           paged=True, block_size=16)
+    cb.submit(Request(uid=0, prompt=short_prompt, max_new_tokens=8))
+    cb.submit(Request(uid=1, prompt=long_prompt, max_new_tokens=8))
+    results = cb.run_until_drained()
+
+CLI:  PYTHONPATH=src python -m repro.launch.serve --paged --quantize
+Bench: PYTHONPATH=src python -m benchmarks.serve_bench  (dense vs paged)
 """
 
 import time
@@ -39,17 +61,20 @@ def main():
         print(f"{tag:14s} int{n_bits}: packed {frac:.0%} of param bytes, "
               f"token agreement {agree:.0%} -> {out[0].tolist()}")
 
-    # continuous batching with quantized weights
+    # continuous batching with quantized weights + paged KV cache:
+    # ragged prompt lengths in one batch (impossible with the dense cache)
     eng.quantize(PimQuantConfig(n_bits=8, min_features=16))
-    cb = ContinuousBatcher(cfg, eng.params, n_slots=2, cache_len=48, prompt_len=8)
-    for uid in range(6):
-        cb.submit(Request(uid=uid, prompt=prompts[uid % 4], max_new_tokens=4))
+    cb = ContinuousBatcher(cfg, eng.params, n_slots=2, cache_len=48,
+                           paged=True, block_size=8)
+    for uid, t in enumerate([8, 5, 11, 3, 8, 6]):
+        cb.submit(Request(uid=uid, prompt=prompts[uid % 4][:t],
+                          max_new_tokens=4))
     t0 = time.perf_counter()
     results = cb.run_until_drained()
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
-    print(f"\ncontinuous batching: {len(results)} requests, {n_tok} tokens, "
-          f"{dt:.1f}s (2 slots, PIM-resident weights)")
+    print(f"\ncontinuous batching (paged): {len(results)} ragged requests, "
+          f"{n_tok} tokens, {dt:.1f}s (2 slots, PIM-resident weights)")
 
 
 if __name__ == "__main__":

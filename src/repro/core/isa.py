@@ -94,7 +94,7 @@ class Instr:
 def cycle_cost(instr: Instr, n_bits: int, acc_bits: int, k: int = 16) -> int:
     """Cycle cost charged by the tile controller for one instruction.
 
-    Bit-serial cost model (see DESIGN.md / latency_models.py):
+    Bit-serial cost model (see DESIGN.md §3 / latency_models.py):
       ADD/SUB   2 cycles per bit (read + write phases of the overlay RF)
       MULT/MACC Booth radix-2: 4*N*(N+1)  (calibrated to the paper's TOPS)
       FOLD      one in-block reduction level: acc_bits + 4   (PiCaSO hop)

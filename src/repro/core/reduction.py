@@ -76,7 +76,10 @@ def reduction_latency_model(
 # ---------------------------------------------------------------------------
 
 def _axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    if hasattr(lax, "axis_size"):          # jax >= 0.5
+        return lax.axis_size(axis)
+    return jax.core.get_axis_env().axis_size(axis) if hasattr(
+        jax.core, "get_axis_env") else lax.psum(1, axis)
 
 
 def allreduce_linear(x: jnp.ndarray, axis: str) -> jnp.ndarray:

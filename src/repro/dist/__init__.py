@@ -1,0 +1,15 @@
+"""Distribution layer: logical-axis sharding rules + helpers."""
+
+from .sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    current_context,
+    params_partition_specs,
+    shard,
+    sharding_rules,
+)
+
+__all__ = [
+    "SERVE_RULES", "TRAIN_RULES", "current_context",
+    "params_partition_specs", "shard", "sharding_rules",
+]

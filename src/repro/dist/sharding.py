@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules (DESIGN.md §5).
+
+Model code never names mesh axes. It annotates values with *logical*
+axes — ``shard(x, "batch", "seq", "heads", "head_dim")`` — and a rule
+table maps each logical axis to zero or more mesh axes. Outside a
+``sharding_rules(mesh, rules)`` context every annotation is a no-op, so
+unit tests on one CPU device run the exact production code path.
+
+Resolution is defensive in two ways (both load-bearing for the shape
+grid):
+
+  - divisibility: a mesh axis is used only when its size divides the
+    dimension (batch=1 long_500k drops the batch axes);
+  - single use: each mesh axis is consumed at most once per value,
+    left to right (decode_32k's batch grabs ``data`` so the kv_seq rule
+    is dropped; long_500k's batch=1 frees ``data`` for kv_seq — the two
+    cache layouts of DESIGN.md §5 fall out of one rule table).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+#: training: batch over (pod, data); TP over model for heads / ff / vocab.
+TRAIN_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "layers": None,
+    "kv_seq": None,
+    "cache_head_dim": None,
+}
+
+#: serving: same TP split, plus sequence-parallel KV for batch-1 cells
+#: (kv_seq over data — only claimed when the batch rule leaves it free).
+SERVE_RULES: Dict[str, Axes] = {
+    **TRAIN_RULES,
+    "kv_seq": "data",
+}
+
+
+class ShardingContext:
+    def __init__(self, mesh: Mesh, rules: Dict[str, Axes]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def _axis_size(self, name: str) -> int:
+        return self.mesh.shape[name] if name in self.mesh.axis_names else 1
+
+    def resolve(self, *names: Optional[str], shape: Optional[Sequence[int]] = None) -> P:
+        """Logical names -> PartitionSpec under this mesh, skipping mesh
+        axes that do not divide the dimension or are already used."""
+        used: set = set()
+        out = []
+        for i, logical in enumerate(names):
+            axes = self.rules.get(logical) if logical else None
+            if axes is None:
+                out.append(None)
+                continue
+            cand = (axes,) if isinstance(axes, str) else tuple(axes)
+            cand = [a for a in cand if self._axis_size(a) > 1 and a not in used]
+            dim = None if shape is None or i >= len(shape) else int(shape[i])
+            picked: Tuple[str, ...] = ()
+            if dim is not None:
+                total = 1
+                for a in cand:
+                    total *= self._axis_size(a)
+                if total > 1 and dim % total == 0:
+                    picked = tuple(cand)
+                else:  # composite didn't fit — try a single axis
+                    for a in cand:
+                        if dim % self._axis_size(a) == 0:
+                            picked = (a,)
+                            break
+            else:
+                picked = tuple(cand)
+            used.update(picked)
+            if not picked:
+                out.append(None)
+            elif len(picked) == 1:
+                out.append(picked[0])
+            else:
+                out.append(picked)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+_local = threading.local()
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, rules: Optional[Dict[str, Axes]] = None):
+    prev = current_context()
+    _local.ctx = ShardingContext(mesh, TRAIN_RULES if rules is None else rules)
+    try:
+        yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain `x`'s sharding by logical axis names (no-op w/o context)."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = ctx.resolve(*names, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning
+# ---------------------------------------------------------------------------
+
+#: projection kernels whose OUTPUT features split over model (col-parallel)
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w1", "wi"}
+#: second matmuls: INPUT features split over model (row-parallel)
+_ROW_PARALLEL = {"wo", "w_down", "w2"}
+
+
+def _leaf_spec(path, leaf) -> P:
+    ndim = getattr(leaf, "ndim", 0)
+    shape = tuple(getattr(leaf, "shape", ()))
+    ctx = current_context()
+    if ctx is None or ndim < 2:
+        return P()
+    name = ""
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            name = key
+            break
+    model = ctx._axis_size("model")
+
+    def fit(dim: int) -> Optional[str]:
+        return "model" if model > 1 and dim % model == 0 else None
+
+    axes: list = [None] * ndim
+    if name in _COL_PARALLEL or name == "embed" or name == "lm_head":
+        axes[-1] = fit(shape[-1])
+    elif name in _ROW_PARALLEL:
+        axes[-2] = fit(shape[-2])
+    elif name == "planes" and ndim >= 3:   # PimWeight [n_d, K8, M]
+        axes[-1] = fit(shape[-1])
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def params_partition_specs(params_shapes: Any):
+    """PartitionSpec tree for a parameter pytree (needs an active
+    sharding_rules context; launch.specs.param_shardings applies the
+    per-leaf divisibility fixup on top)."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, params_shapes)

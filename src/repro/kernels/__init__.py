@@ -1,15 +1,20 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: bit-plane GEMV.
+"""Pallas TPU kernels for the paper's compute hot-spots.
 
-bitplane_gemv   decode-shape kernel (B untiled)
-bitplane_gemm   prefill/training-shape kernel (B tiled)
-pack            digit-plane packing kernel
-ops             public jit'd wrappers (dispatch + epilogue)
-ref             pure-jnp oracles
+bitplane_gemv     decode-shape bit-plane kernel (B untiled)
+bitplane_gemm     prefill/training-shape bit-plane kernel (B tiled)
+pack              digit-plane packing kernel
+paged_attention   paged-decode attention (block-table KV gather)
+ops               public jit'd wrappers (dispatch + epilogue)
+ref               pure-jnp oracles
 """
 
 from .bitplane_gemm import bitplane_gemm
 from .bitplane_gemv import bitplane_gemv
 from .pack import pack_bitplanes
+from .paged_attention import paged_attention, paged_decode_attention
 from . import ops, ref
 
-__all__ = ["bitplane_gemm", "bitplane_gemv", "pack_bitplanes", "ops", "ref"]
+__all__ = [
+    "bitplane_gemm", "bitplane_gemv", "pack_bitplanes",
+    "paged_attention", "paged_decode_attention", "ops", "ref",
+]

@@ -1,0 +1,139 @@
+"""Pallas paged-decode attention: block-table KV gather + online softmax.
+
+The serving-side companion of the bit-plane GEMV (DESIGN.md §8): decode
+attention where each slot's KV lives in non-contiguous fixed-size pages of
+a shared pool, addressed through a per-slot block table. One grid program
+per slot walks its table, gathers pages with dynamic loads, and folds them
+into a running (m, l, acc) online softmax over the slot's ragged length —
+so a batch of requests with completely different prompt lengths decodes in
+one fused call, no padding to a common length.
+
+Layouts:
+    q            [B, H, hd]                 one query token per slot
+    k/v_pages    [n_blocks, bs, KV, hd]     the shared page pool
+    block_table  [B, max_blocks] int32      page id of slot b's j-th page
+    lengths      [B] int32                  valid kv count (ragged)
+    window       [1] int32                  sliding window (cache capacity
+                                            = full attention)
+
+Like the bit-plane kernels this runs interpret-mode on CPU as the
+correctness tool (kernels/ref.paged_attention_ref is the oracle). On a
+real TPU the page gather becomes scalar-prefetch + ANY-memory-space DMA
+(PrefetchScalarGridSpec); the block walk and online-softmax math are
+identical, which is exactly what the parity tests pin down.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    q_ref,        # [1, H, hd]
+    kp_ref,       # [n_blocks, bs, KV, hd] — whole pool visible
+    vp_ref,
+    bt_ref,       # [1, max_blocks] int32
+    len_ref,      # [1] int32
+    win_ref,      # [1] int32
+    out_ref,      # [1, H, hd] f32
+    *,
+    n_kv: int,
+    block_size: int,
+):
+    h, hd = q_ref.shape[1], q_ref.shape[2]
+    g = h // n_kv
+    max_blocks = bt_ref.shape[1]
+    length = len_ref[0]
+    window = win_ref[0]
+    q_pos = length - 1
+    qf = q_ref[0].reshape(n_kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
+
+    m = jnp.full((n_kv, g), NEG_INF, jnp.float32)
+    l = jnp.zeros((n_kv, g), jnp.float32)
+    acc = jnp.zeros((n_kv, g, hd), jnp.float32)
+    for j in range(max_blocks):          # static walk; masking does raggedness
+        page = bt_ref[0, j]
+        kj = kp_ref[pl.ds(page, 1)][0].astype(jnp.float32)   # [bs, KV, hd]
+        vj = vp_ref[pl.ds(page, 1)][0].astype(jnp.float32)
+        scores = jnp.einsum("kgh,skh->kgs", qf, kj)          # [KV, g, bs]
+        kv_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        ok = (kv_pos < length) & (kv_pos > q_pos - window)
+        scores = jnp.where(ok[None, None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum("kgs,skh->kgh", p, vj)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out_ref[0] = out.reshape(h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jnp.ndarray,            # [B, H, hd]
+    k_pages: jnp.ndarray,      # [n_blocks, bs, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32
+    lengths: jnp.ndarray,      # [B] int32
+    window: jnp.ndarray,       # scalar / [1] int32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas entry point; returns f32 [B, H, hd] attention outputs."""
+    b, h, hd = q.shape
+    n_blocks, bs, n_kv, hd2 = k_pages.shape
+    assert hd2 == hd, (hd2, hd)
+    assert h % n_kv == 0, (h, n_kv)
+    mb = block_table.shape[1]
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    kernel = functools.partial(
+        _paged_decode_kernel, n_kv=n_kv, block_size=bs
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, mb), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k_pages, v_pages, block_table.astype(jnp.int32),
+      lengths.astype(jnp.int32), win)
+
+
+def paged_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    window: jnp.ndarray,
+    *,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Impl dispatch, mirroring kernels.ops: `auto` uses the jnp oracle on
+    CPU (dry-run lowering) and the Pallas kernel on TPU;
+    `pallas_interpret` forces the kernel body through the interpreter."""
+    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, block_table, lengths, window
+        )
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return paged_decode_attention(
+        q, k_pages, v_pages, block_table, lengths, window, interpret=interpret
+    )

@@ -1,4 +1,5 @@
-"""Pure-jnp oracles for the bit-plane kernels.
+"""Pure-jnp oracles for the Pallas kernels (bit-plane GEMV/GEMM + paged
+decode attention).
 
 The bit-plane format is the TPU adaptation of the paper's bit-serial PIM
 storage (DESIGN.md §2): an n-bit signed weight matrix is stored as
@@ -131,3 +132,47 @@ def bitplane_matmul_planewise_ref(
 
 def dequantize_ref(planes, scale, n_bits: int, group: int = 1) -> jnp.ndarray:
     return unpack_ref(planes, n_bits, group).astype(jnp.float32) * scale[None, :]
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # [B, H, hd] — one query token per slot
+    k_pages: jnp.ndarray,      # [n_blocks, block_size, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32 page ids per slot
+    lengths: jnp.ndarray,      # [B] int32 valid KV count per slot
+    window: jnp.ndarray,       # scalar int32; kv_pos > q_pos - window
+) -> jnp.ndarray:
+    """Oracle: gather every slot's pages dense, masked GQA softmax.
+
+    Logical kv position of page j, row r is `j*block_size + r`; the query
+    sits at `lengths-1`. Matches the kernel's `acc / max(l, eps)` epilogue
+    so empty slots (length 0) produce finite garbage, not NaNs.
+    """
+    b, h, hd = q.shape
+    _, bs, kv, _ = k_pages.shape
+    mb = block_table.shape[1]
+    g = h // kv
+    k = k_pages[block_table].reshape(b, mb * bs, kv, hd)   # [B, S, KV, hd]
+    v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    kv_pos = jnp.arange(mb * bs, dtype=jnp.int32)
+    q_pos = (lengths - 1)[:, None]
+    ok = (kv_pos[None, :] < lengths[:, None]) & (kv_pos[None, :] > q_pos - window)
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs",
+        q.reshape(b, kv, g, hd).astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * (hd ** -0.5)
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, hd)

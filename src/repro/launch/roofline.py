@@ -70,8 +70,12 @@ _TRIP = re.compile(r"known_trip_count\\?\":\{\\?\"n\\?\":\\?\"(\d+)")
 _TRIP2 = re.compile(r'known_trip_count":\{"n":"(\d+)"')
 _BRANCHES = re.compile(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w\.\-]+)|false_computation=%?([\w\.\-]+))")
 _CONSTANT = re.compile(r"constant\((\d+)\)")
+#: operands may carry an inline type (`dot(f32[64,64]{1,0} %a, ...)`) on
+#: newer XLA text dumps — the type prefix is optional in both slots
+_OPND = r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?%([\w\.\-]+)"
 _DOT_LINE = re.compile(
-    r"=\s*([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+dot\(\s*%([\w\.\-]+),\s*%([\w\.\-]+)\)"
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+dot\(\s*" + _OPND
+    + r",\s*" + _OPND + r"\)"
 )
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _CONV_LINE = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+convolution\(")

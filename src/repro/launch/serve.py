@@ -3,6 +3,12 @@
 Runs the continuous-batching scheduler over a smoke config, optionally
 with PIM bit-plane quantized weights (the paper's technique): --quantize
 converts every projection to packed digit planes first.
+
+--paged switches to the block-paged KV cache (DESIGN.md §8): prompt
+lengths are drawn ragged per request (no shared padded length), slots
+refill at any tick, and finished requests' pages recycle through the
+free list. Without --paged the dense cache requires one shared
+--prompt-len.
 """
 
 from __future__ import annotations
@@ -29,6 +35,11 @@ def main():
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--group", type=int, default=1)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache: ragged prompts, slot "
+                         "refill at any tick, page recycling")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size in tokens (--paged)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -44,12 +55,19 @@ def main():
     cache_len = args.prompt_len + args.new_tokens + 8
     batcher = ContinuousBatcher(
         cfg, params, n_slots=args.slots, cache_len=cache_len,
-        prompt_len=args.prompt_len,
+        prompt_len=None if args.paged else args.prompt_len,
+        paged=args.paged, block_size=args.block_size,
     )
     key = jax.random.PRNGKey(1)
     for uid in range(args.requests):
+        if args.paged:  # ragged: anywhere from 4 tokens up to --prompt-len
+            t = 4 + int(jax.random.randint(
+                jax.random.fold_in(key, 1000 + uid), (), 0,
+                max(args.prompt_len - 3, 1)))
+        else:
+            t = args.prompt_len
         prompt = jax.random.randint(
-            jax.random.fold_in(key, uid), (args.prompt_len,), 0, cfg.vocab_size
+            jax.random.fold_in(key, uid), (t,), 0, cfg.vocab_size
         ).astype(jnp.int32)
         batcher.submit(Request(uid=uid, prompt=prompt,
                                max_new_tokens=args.new_tokens))
@@ -57,8 +75,10 @@ def main():
     results = batcher.run_until_drained()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in results.values())
+    mode = "paged" if args.paged else "dense"
     print(f"served {len(results)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on CPU smoke config)")
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, {mode} cache, "
+          f"CPU smoke config)")
     for uid in sorted(results)[:3]:
         print(f"  req {uid}: {results[uid]}")
 

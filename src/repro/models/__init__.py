@@ -3,9 +3,11 @@
 from .transformer import (
     count_params,
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_lm,
+    init_paged_pool,
     prefill,
 )
 from .encdec import (
@@ -17,7 +19,8 @@ from .encdec import (
 )
 
 __all__ = [
-    "count_params", "decode_step", "forward", "init_cache", "init_lm",
-    "prefill", "decode_step_encdec", "forward_encdec", "init_encdec",
+    "count_params", "decode_step", "decode_step_paged", "forward",
+    "init_cache", "init_lm", "init_paged_pool", "prefill",
+    "decode_step_encdec", "forward_encdec", "init_encdec",
     "init_encdec_cache", "prefill_encdec",
 ]

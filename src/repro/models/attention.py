@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.paged_attention import paged_attention
 from ..quant.bitplane import pim_linear
 from .common import NEG_INF, Params, apply_rope, dense_init, split_keys
 
@@ -263,6 +264,47 @@ def attention_decode(
     mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, None, :]
     out = _gqa_core(q, cache_k, cache_v, mask)
     return pim_linear(out, params["wo"]), cache_k, cache_v
+
+
+def attention_decode_paged(
+    params: Params,
+    x: jnp.ndarray,             # [B, 1, D] — one new token per slot
+    positions: jnp.ndarray,     # [B] int32 — per-slot index of the new token
+    k_pages: jnp.ndarray,       # [n_blocks, bs, KV, hd] shared page pool
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,   # [B, max_blocks] int32
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a block-paged cache (DESIGN.md §8).
+
+    Unlike `attention_decode` there is no global write position: each slot
+    carries its own `positions[b]`, the new KV row scatters into page
+    `block_table[b, positions[b] // bs]` at offset `positions[b] % bs`,
+    and attention runs over the slot's ragged length — so slots refilled
+    mid-run with different prompt lengths coexist in one decode batch.
+    """
+    b = x.shape[0]
+    bs = k_pages.shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions[:, None], rope_theta)
+    k = apply_rope(k, positions[:, None], rope_theta)
+    page = block_table[jnp.arange(b), positions // bs]      # [B]
+    offset = positions % bs
+    k_pages = k_pages.at[page, offset].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, offset].set(v[:, 0].astype(v_pages.dtype))
+    capacity = block_table.shape[1] * bs
+    win = jnp.asarray(capacity if window is None else window, jnp.int32)
+    out = paged_attention(
+        q[:, 0], k_pages, v_pages, block_table, positions + 1, win, impl=impl
+    )                                                        # [B, H, hd] f32
+    out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    return pim_linear(out, params["wo"]), k_pages, v_pages
 
 
 # ---------------------------------------------------------------------------

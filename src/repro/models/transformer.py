@@ -33,6 +33,7 @@ from ..configs.base import ModelConfig
 from ..dist.sharding import shard
 from .attention import (
     attention_decode,
+    attention_decode_paged,
     attention_forward,
     attention_prefill,
     init_attention,
@@ -348,8 +349,15 @@ def prefill(
     cfg: ModelConfig,
     cache_len: int,
     extra_embeds: Optional[jnp.ndarray] = None,
+    last_pos: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Cache]:
-    """Process the prompt, build the cache, return last-position logits."""
+    """Process the prompt, build the cache, return last-position logits.
+
+    `last_pos` (dynamic scalar) selects which position's logits to return
+    instead of T-1 — callers that right-pad ragged prompts to a shared
+    bucketed shape (paged serving) pass the true prompt end, so one XLA
+    compilation covers every prompt length in the bucket (causality keeps
+    positions < last_pos unaffected by the padding)."""
     x = _embed(params, tokens, cfg, extra_embeds)
     b, t, _ = x.shape
     positions = jnp.arange(t, dtype=jnp.int32)
@@ -448,7 +456,13 @@ def prefill(
 
     cache["position"] = jnp.asarray(t, jnp.int32)
     cache = shard_cache(cache)
-    logits = _head(params, x[:, -1:], cfg)
+    if last_pos is None:
+        xe = x[:, -1:]
+    else:
+        xe = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32), 1, axis=1
+        )
+    logits = _head(params, xe, cfg)
     return logits, cache
 
 
@@ -563,6 +577,68 @@ def decode_step(
     new_cache = shard_cache(new_cache)
     logits = _head(params, x, cfg)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def init_paged_pool(
+    cfg: ModelConfig, n_blocks: int, block_size: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-layer KV page pools [L, n_blocks, bs, KV, hd] (bf16 like the
+    dense cache). Page ids are shared across layers: one block-table entry
+    addresses the same page index in every layer's pool."""
+    if cfg.block_kind != "attn":
+        raise ValueError(
+            f"paged KV cache requires attention layers, got {cfg.block_kind}"
+        )
+    dt = compute_dtype(cfg.dtype)
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+def decode_step_paged(
+    params: Params,
+    token: jnp.ndarray,        # [B, 1] int32 — one token per slot
+    k_pages: jnp.ndarray,      # [L, n_blocks, bs, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32 (shared across layers)
+    positions: jnp.ndarray,    # [B] int32 — per-slot index of the new token
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step against the block-paged cache: per-slot positions
+    instead of the dense cache's single global write offset, so every slot
+    may sit at a different sequence length."""
+    if cfg.block_kind != "attn":
+        raise ValueError("decode_step_paged supports attention stacks only")
+    dt = compute_dtype(cfg.dtype)
+    x = params["embed"][token].astype(dt)
+    capacity = block_table.shape[1] * k_pages.shape[2]
+    windows = _window_array(cfg, capacity)
+
+    def body(xc, xs):
+        lp, w, kp, vp = xs
+        h, kp, vp = attention_decode_paged(
+            lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
+            kp, vp, block_table, window=w, **_attn_kwargs(cfg),
+        )
+        xc = xc + h
+        hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        if cfg.n_experts:
+            h2, _ = moe_forward(
+                lp["moe"], hin, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.act,
+            )
+        else:
+            h2 = _ffn(lp, hin, cfg)
+        return xc + h2, (kp, vp)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["layers"], windows, k_pages, v_pages)
+    )
+    logits = _head(params, x, cfg)
+    return logits, k_pages, v_pages
 
 
 def _cache_len(cache: Cache, cfg: ModelConfig) -> int:

@@ -40,7 +40,9 @@ def compressed_psum(
     Must run inside shard_map with `axis` unreduced. Returns (mean grads,
     new residual).
     """
-    n = lax.axis_size(axis)
+    from ..core.reduction import _axis_size
+
+    n = _axis_size(axis)
 
     def one(g, r):
         gf = g.astype(jnp.float32) + r

@@ -1,3 +1,8 @@
 from .engine import ServeConfig, ServeEngine
+from .paged_cache import SCRATCH_PAGE, PagedKVCache
 from .scheduler import ContinuousBatcher, Request
-__all__ = ["ServeConfig", "ServeEngine", "ContinuousBatcher", "Request"]
+
+__all__ = [
+    "ServeConfig", "ServeEngine", "ContinuousBatcher", "Request",
+    "PagedKVCache", "SCRATCH_PAGE",
+]

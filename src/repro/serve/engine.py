@@ -5,6 +5,11 @@ resident weights. `ServeEngine.quantize()` converts the projection
 weights to packed bit-planes (PimWeight), after which every decode matmul
 runs through the bit-plane kernel path (interpret-mode Pallas on CPU,
 native on TPU), cutting decode HBM traffic by 16/n_bits.
+
+`ServeConfig.paged=True` swaps the dense pre-allocated KV cache for the
+block-paged cache (serve.paged_cache, DESIGN.md §8): decode attention
+gathers pages through a block table with per-slot positions. The dense
+path remains the default fallback.
 """
 
 from __future__ import annotations
@@ -16,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, init_cache, prefill
+from ..models import decode_step, decode_step_paged, init_cache, prefill
 from ..quant.bitplane import PimQuantConfig, quantize_tree, tree_packed_fraction
+from .paged_cache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -26,6 +32,8 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 = greedy
     eos_token: int = -1       # -1 = never stop early
+    paged: bool = False       # block-paged KV cache (per-slot positions)
+    block_size: int = 16      # KV page size in tokens (paged mode)
 
 
 class ServeEngine:
@@ -38,6 +46,11 @@ class ServeEngine:
             lambda p, t: prefill(p, t, cfg, cache_len=serve_cfg.max_cache_len)
         )
         self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+        self._decode_paged = jax.jit(
+            lambda p, t, kp, vp, bt, pos: decode_step_paged(
+                p, t, kp, vp, bt, pos, cfg
+            )
+        )
 
     def quantize(self, qcfg: Optional[PimQuantConfig] = None) -> float:
         """Convert projection weights to PIM-resident bit-planes."""
@@ -53,6 +66,8 @@ class ServeEngine:
         self, prompts: jnp.ndarray, rng: Optional[jax.Array] = None
     ) -> jnp.ndarray:
         """Greedy/temperature generation for a [B, T] prompt batch."""
+        if self.sc.paged:
+            return self._generate_paged(prompts, rng)
         b, t = prompts.shape
         logits, cache = self._prefill(self.params, prompts)
         out = []
@@ -60,6 +75,33 @@ class ServeEngine:
         for i in range(self.sc.max_new_tokens):
             out.append(tok)
             logits, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(logits[:, -1], rng)
+        return jnp.concatenate(out, axis=-1)
+
+    def _generate_paged(
+        self, prompts: jnp.ndarray, rng: Optional[jax.Array]
+    ) -> jnp.ndarray:
+        b, t = prompts.shape
+        logits, cache = self._prefill(self.params, prompts)
+        pc = PagedKVCache(
+            self.cfg, n_slots=b, max_len=self.sc.max_cache_len,
+            block_size=self.sc.block_size,
+        )
+        for i in range(b):
+            pc.alloc_slot(i, t)
+            pc.write_prefill(i, cache["k"][:, i], cache["v"][:, i], t)
+        out = []
+        tok = self._sample(logits[:, -1], rng)
+        for _ in range(self.sc.max_new_tokens):
+            out.append(tok)
+            for i in range(b):
+                pc.ensure_capacity(i, int(pc.lengths[i]) + 1)
+            logits, pc.k_pages, pc.v_pages = self._decode_paged(
+                self.params, tok, pc.k_pages, pc.v_pages,
+                pc.device_block_table(), pc.device_positions(),
+            )
+            for i in range(b):
+                pc.append_position(i)
             tok = self._sample(logits[:, -1], rng)
         return jnp.concatenate(out, axis=-1)
 

@@ -1,0 +1,214 @@
+"""Block-paged KV cache for continuous batching (DESIGN.md §8).
+
+The dense serving cache keeps one global write position, which forces
+every request in a batch to share a padded prompt length and corrupts KV
+placement when a slot is refilled mid-run. `PagedKVCache` removes that
+restriction: KV lives in fixed-size pages of a shared per-layer pool, a
+per-slot block table maps logical position `p` to page
+`block_table[slot, p // block_size]`, and each slot tracks its own
+length. Alloc/free is a host-side free list — refilling a finished slot
+recycles its pages without touching any other slot's KV.
+
+Page 0 is reserved as a scratch page: inactive slots keep an all-zero
+block table, so the decode step's unconditional KV scatter for idle batch
+rows lands in scratch instead of corrupting live pages.
+
+Device state (page pools) stays in jnp arrays and is threaded through the
+jitted decode step; table/length bookkeeping is tiny host-side numpy.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import init_paged_pool
+
+#: the reserved scratch page id (never allocated)
+SCRATCH_PAGE = 0
+
+
+class PagedKVCache:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_slots: int,
+        max_len: int,
+        block_size: int = 16,
+        n_blocks: int = 0,
+    ):
+        """`max_len`: max tokens (prompt + generated) any slot may hold.
+        `n_blocks=0` sizes the pool for full occupancy: scratch + every
+        slot at max_len."""
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {max_len}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.max_blocks_per_slot = -(-max_len // block_size)
+        self.n_blocks = n_blocks or 1 + n_slots * self.max_blocks_per_slot
+        if self.n_blocks < 1 + self.max_blocks_per_slot:
+            raise ValueError(
+                f"n_blocks={self.n_blocks} cannot hold even one slot "
+                f"({self.max_blocks_per_slot} blocks + scratch)"
+            )
+        self.k_pages, self.v_pages = init_paged_pool(
+            cfg, self.n_blocks, block_size
+        )
+        self.block_table = np.full(
+            (n_slots, self.max_blocks_per_slot), SCRATCH_PAGE, np.int32
+        )
+        self.lengths = np.zeros((n_slots,), np.int32)
+        self.free_blocks: Deque[int] = collections.deque(
+            range(1, self.n_blocks)
+        )
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        #: admission control: worst-case block counts promised to active
+        #: slots (reserve_slot) — ensure_capacity can then never exhaust
+        #: the pool mid-run
+        self._reserved: Dict[int, int] = {}
+
+    # -- invariant helpers -------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free_blocks)
+
+    def owned_blocks(self, slot: int) -> Tuple[int, ...]:
+        return tuple(self._owned[slot])
+
+    def check_invariants(self) -> None:
+        """Every non-scratch page is owned by exactly one slot XOR free."""
+        seen = set()
+        for slot, blocks in enumerate(self._owned):
+            n = int(self.lengths[slot])
+            assert len(blocks) * self.block_size >= n, (slot, blocks, n)
+            for j, b in enumerate(blocks):
+                assert b != SCRATCH_PAGE and b not in seen, (slot, b)
+                assert int(self.block_table[slot, j]) == b, (slot, j)
+                seen.add(b)
+        free = set(self.free_blocks)
+        assert not (seen & free), seen & free
+        assert seen | free == set(range(1, self.n_blocks)), "leaked pages"
+        assert self.available_blocks() >= 0, "over-committed reservations"
+
+    # -- alloc / free ------------------------------------------------------
+
+    def _blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def available_blocks(self) -> int:
+        """Free blocks not promised to an active slot's reservation."""
+        outstanding = sum(
+            r - len(self._owned[s]) for s, r in self._reserved.items()
+        )
+        return self.n_free - outstanding
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return self.available_blocks() >= self._blocks_for(n_tokens)
+
+    def reserve_slot(self, slot: int, n_tokens: int) -> bool:
+        """Admission control: promise `slot` enough pages for `n_tokens`
+        total positions (prompt + all future decode tokens). Returns False
+        when the pool cannot honor the promise right now; after True,
+        ensure_capacity up to `n_tokens` is guaranteed not to exhaust."""
+        need = self._blocks_for(n_tokens)
+        if need > self.max_blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed max "
+                f"{self.max_blocks_per_slot * self.block_size}"
+            )
+        if not self.can_fit(n_tokens):
+            return False
+        self._reserved[slot] = need
+        return True
+
+    def alloc_slot(self, slot: int, n_tokens: int) -> None:
+        """Reserve pages so `slot` can hold `n_tokens`; starts the slot
+        empty (length 0 — the caller writes KV then sets the length)."""
+        assert not self._owned[slot], f"slot {slot} already allocated"
+        self.ensure_capacity(slot, n_tokens)
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> None:
+        """Grow `slot`'s block list to cover `n_tokens` positions."""
+        need = -(-n_tokens // self.block_size)
+        if need > self.max_blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed max "
+                f"{self.max_blocks_per_slot * self.block_size}"
+            )
+        while len(self._owned[slot]) < need:
+            if not self.free_blocks:
+                raise MemoryError("paged KV pool exhausted")
+            b = self.free_blocks.popleft()
+            self.block_table[slot, len(self._owned[slot])] = b
+            self._owned[slot].append(b)
+
+    def free_slot(self, slot: int) -> None:
+        """Recycle all of `slot`'s pages back to the free list (LIFO, so
+        just-released pages are reused first — they are the likeliest to
+        still be resident in any cache tier)."""
+        self.free_blocks.extendleft(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self._reserved.pop(slot, None)
+        self.block_table[slot, :] = SCRATCH_PAGE
+        self.lengths[slot] = 0
+
+    # -- KV data movement --------------------------------------------------
+
+    def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
+                      n_tokens: int) -> None:
+        """Scatter a prefilled dense cache row into `slot`'s pages.
+
+        k/v: [L, S, KV, hd] with the first `n_tokens` positions valid (the
+        output of models.prefill for one request). Allocates as needed.
+        """
+        bs = self.block_size
+        self.ensure_capacity(slot, n_tokens)
+        n_pages = self._blocks_for(n_tokens)
+        pad = n_pages * bs
+        l, _, kvh, hd = k.shape
+        # one scatter per pool (not per page — a functional .at update
+        # copies the whole pool, so per-page loops cost O(n_pages) copies);
+        # zero-padding the ragged tail is fine: those rows sit beyond the
+        # slot's length (masked) until a decode scatter overwrites them
+        pages = jnp.asarray(np.array(self._owned[slot][:n_pages]))
+
+        def scatter(pool, src):
+            src = jnp.pad(src[:, :n_tokens], ((0, 0), (0, pad - n_tokens),
+                                              (0, 0), (0, 0)))
+            src = src.reshape(l, n_pages, bs, kvh, hd).astype(pool.dtype)
+            return pool.at[:, pages].set(src)
+
+        self.k_pages = scatter(self.k_pages, k)
+        self.v_pages = scatter(self.v_pages, v)
+        self.lengths[slot] = n_tokens
+
+    def append_position(self, slot: int) -> None:
+        """Account one decoded token (the KV scatter itself happens inside
+        decode_step_paged); grows the page list when the slot crosses a
+        block boundary."""
+        self.ensure_capacity(slot, int(self.lengths[slot]) + 1)
+        self.lengths[slot] += 1
+
+    # -- device views ------------------------------------------------------
+
+    def device_block_table(self) -> jnp.ndarray:
+        # fresh copy: jnp.asarray of host numpy can be ZERO-COPY on CPU,
+        # and this object mutates block_table/lengths in place — an
+        # aliasing device array would race with async-dispatched decodes
+        return jnp.asarray(np.array(self.block_table))
+
+    def device_positions(self) -> jnp.ndarray:
+        """Per-slot write index for the next decode step (= length)."""
+        return jnp.asarray(np.array(self.lengths))
+
+    def slot_occupancy(self) -> float:
+        """Fraction of non-scratch pages currently allocated."""
+        return 1.0 - self.n_free / max(self.n_blocks - 1, 1)

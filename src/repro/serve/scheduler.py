@@ -6,10 +6,17 @@ cache). One decode step always advances every active slot — the engine
 never idles while requests are queued, which keeps the decode GEMV batch
 (the paper's workload) full.
 
-Limitation (documented): the cache keeps one global write position, so
-all requests must share a (padded) prompt length and slots refilled after
-tick 0 write their KV at the global offset. Per-slot position tracking
-(paged-attention style) is a recorded extension in DESIGN.md §8.
+Two cache modes:
+
+  dense (paged=False): the seed behaviour. The cache keeps one global
+  write position, so all requests must share a (padded) prompt length and
+  slots refilled after tick 0 write their KV at the global offset.
+
+  paged (paged=True): block-paged KV with per-slot positions
+  (DESIGN.md §8). Requests may have arbitrary distinct prompt lengths, a
+  finished slot's pages are recycled through the free list, and a queued
+  request is prefilled into a free slot at ANY tick without corrupting
+  its KV placement — the restriction documented above is gone.
 """
 
 from __future__ import annotations
@@ -22,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, init_cache, prefill
+from ..models import decode_step, decode_step_paged, init_cache, prefill
+from .paged_cache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -55,36 +63,104 @@ def _insert_batch(cache_tree, slot_tree, idx: int):
 
 
 class ContinuousBatcher:
-    def __init__(self, cfg: ModelConfig, params: Any, n_slots: int,
-                 cache_len: int, prompt_len: int):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        n_slots: int,
+        cache_len: int,
+        prompt_len: Optional[int] = None,
+        *,
+        paged: bool = False,
+        block_size: int = 16,
+        n_blocks: int = 0,
+    ):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.prompt_len = prompt_len
+        self.paged = paged
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self.cache = init_cache(cfg, n_slots, cache_len)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.finished: Dict[int, List[int]] = {}
-        self._prefill1 = jax.jit(
-            lambda p, t: prefill(p, t, cfg, cache_len=cache_len)
-        )
-        self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+        self.ticks = 0
+        if paged:
+            self.pcache = PagedKVCache(
+                cfg, n_slots, max_len=cache_len, block_size=block_size,
+                n_blocks=n_blocks,
+            )
+            self.cache = None
+            self._decode_paged = jax.jit(
+                lambda p, t, kp, vp, bt, pos: decode_step_paged(
+                    p, t, kp, vp, bt, pos, cfg
+                )
+            )
+            # prompts are right-padded to a block-size multiple, so this
+            # retraces once per bucket (cache_len rides on the shape) and
+            # `last_pos` selects the true prompt end dynamically
+            self._prefill_paged = jax.jit(
+                lambda p, toks, lp: prefill(
+                    p, toks, cfg, cache_len=toks.shape[1], last_pos=lp
+                )
+            )
+        else:
+            self.pcache = None
+            self.cache = init_cache(cfg, n_slots, cache_len)
+            self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+            self._prefill_dense = jax.jit(
+                lambda p, t: prefill(p, t, cfg, cache_len=cache_len)
+            )
 
     def submit(self, req: Request):
         self.queue.append(req)
 
+    # -- prefill -----------------------------------------------------------
+
     def _fill_slots(self):
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                logits, c1 = self._prefill1(self.params, req.prompt[None, :])
-                self.cache = _insert_batch(self.cache, c1, i)
-                nxt = int(jnp.argmax(logits[0, -1]))
-                req.generated.append(nxt)
-                self.tokens = self.tokens.at[i, 0].set(nxt)
-                self.slots[i] = req
+                if self.paged:
+                    # admission control: reserve worst-case pages (prompt
+                    # + all decode writes) BEFORE dequeueing, so decode
+                    # growth can never exhaust the pool and an unadmitted
+                    # request stays queued until pages free up
+                    req = self.queue[0]
+                    total = int(req.prompt.shape[0]) + max(
+                        req.max_new_tokens - 1, 0
+                    )
+                    if not self.pcache.reserve_slot(i, total):
+                        break
+                    self.queue.popleft()
+                    self._prefill_into_paged(i, req)
+                else:
+                    self._prefill_into_dense(i, self.queue.popleft())
+
+    def _prefill_into_dense(self, i: int, req: Request):
+        logits, c1 = self._prefill_dense(self.params, req.prompt[None, :])
+        self.cache = _insert_batch(self.cache, c1, i)
+        self._start_slot(i, req, logits)
+
+    def _prefill_into_paged(self, i: int, req: Request):
+        t = int(req.prompt.shape[0])
+        bs = self.pcache.block_size
+        pad = -(-t // bs) * bs
+        toks = jnp.pad(req.prompt, (0, pad - t))[None, :]
+        logits, c1 = self._prefill_paged(
+            self.params, toks, jnp.asarray(t - 1, jnp.int32)
+        )
+        self.pcache.alloc_slot(i, t)
+        self.pcache.write_prefill(i, c1["k"][:, 0], c1["v"][:, 0], t)
+        self._start_slot(i, req, logits)
+
+    def _start_slot(self, i: int, req: Request, logits):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(nxt)
+        self.tokens = self.tokens.at[i, 0].set(nxt)
+        self.slots[i] = req
+
+    # -- decode ------------------------------------------------------------
 
     def step(self) -> int:
         """One scheduler tick: fill free slots, decode once. Returns the
@@ -93,16 +169,34 @@ class ContinuousBatcher:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
-        logits, self.cache = self._decode(self.params, self.tokens, self.cache)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if self.paged:
+            nxt = self._step_paged(active)
+        else:
+            logits, self.cache = self._decode(self.params, self.tokens, self.cache)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         for i in active:
             req = self.slots[i]
             req.generated.append(int(nxt[i]))
             if req.done:
                 self.finished[req.uid] = req.generated
+                if self.paged:
+                    self.pcache.free_slot(i)
                 self.slots[i] = None
         self.tokens = nxt[:, None]
+        self.ticks += 1
         return len(active)
+
+    def _step_paged(self, active: List[int]) -> jnp.ndarray:
+        pc = self.pcache
+        for i in active:  # page for the incoming token must exist pre-jit
+            pc.ensure_capacity(i, int(pc.lengths[i]) + 1)
+        logits, pc.k_pages, pc.v_pages = self._decode_paged(
+            self.params, self.tokens, pc.k_pages, pc.v_pages,
+            pc.device_block_table(), pc.device_positions(),
+        )
+        for i in active:
+            pc.append_position(i)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
         ticks = 0

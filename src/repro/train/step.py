@@ -54,6 +54,10 @@ def make_train_step(
 ) -> Callable:
     loss_fn = make_loss_fn(cfg)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    # NOTE: warmup_steps is deliberately NOT derived from total_steps —
+    # lr(step) must be a function of the step index alone so a run that
+    # crashes and resumes under a different total_steps replays the exact
+    # schedule (the bit-exact recovery property of DESIGN.md §7).
 
     def split_micro(batch: Batch) -> Batch:
         return jax.tree.map(

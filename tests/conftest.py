@@ -4,19 +4,82 @@ IMPORTANT: no XLA_FLAGS / device-count overrides here — unit tests run on
 the single real CPU device. Multi-device behaviour is tested via
 subprocesses (tests/test_dist_subprocess.py) so the device count never
 leaks into this process.
+
+`hypothesis` is an optional test dependency (the `test` extra in
+pyproject.toml). When it is absent we install a minimal stub into
+``sys.modules`` so test modules that do ``from hypothesis import given``
+still import, and every property-based test body skips at call time —
+the rest of the tier-1 suite runs in minimal environments.
 """
+
+import sys
+import types
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "ci",
-    max_examples=20,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("ci")
+try:
+    from hypothesis import HealthCheck, settings
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile(
+        "ci",
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("ci")
+else:
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed (property-based test)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    class _Settings:
+        """No-op stand-in for hypothesis.settings (also usable as decorator)."""
+
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*a, **k):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **k):
+            pass
+
+    class _AnyAttr:
+        """Returns a callable no-op for any attribute (strategies, HealthCheck)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    stub = types.ModuleType("hypothesis")
+    stub.given = _given
+    stub.settings = _Settings
+    stub.HealthCheck = _AnyAttr()
+    stub.assume = lambda *a, **k: True
+    stub.note = lambda *a, **k: None
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: (lambda *a, **k: None)
+    stub.strategies = strategies
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = strategies
 
 
 @pytest.fixture
