@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench serve-demo
+.PHONY: test test-fast bench serve-demo serve-prefix-demo
 
 # tier-1 verify (ROADMAP): full suite, stop on first failure
 test:
@@ -16,3 +16,9 @@ bench:
 
 serve-demo:
 	python -m repro.launch.serve --paged --requests 8 --slots 4 --new-tokens 8
+
+# shared system prompt across all requests: prefix index dedups + skips
+# the shared prefill (DESIGN.md §9)
+serve-prefix-demo:
+	python -m repro.launch.serve --paged --prefix --requests 8 --slots 4 \
+		--new-tokens 8 --shared-prefix-len 32

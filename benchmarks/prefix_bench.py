@@ -1,0 +1,180 @@
+"""Shared-prefix serving benchmark: prefix-indexed vs unshared paged KV.
+
+System-prompt-heavy trace: N requests whose prompts all open with the
+same long prefix (the common production shape — a fixed system prompt or
+few-shot header ahead of a short user turn). The same trace drains
+through the paged continuous batcher twice:
+
+  unshared — PR-1 behaviour: every request prefills its full prompt and
+             allocates private pages for every block, so the prefix's KV
+             is computed and stored N times;
+  shared   — prefix radix index (DESIGN.md §9): the first request
+             publishes its prefix pages, every later request maps them
+             refcounted into its block table and prefills only the
+             uncached suffix through the paged-prefill kernel.
+
+Reports prefill tokens processed, pages drawn from the pool, COW events,
+index hit stats, and **greedy-token parity** (the shared run must emit
+bit-identical tokens — fp32 smoke config, like tests/test_paged_cache).
+Writes ``results/prefix_bench.json``. Wall time on this CPU host is not
+the TPU story; the structural quantities (prefill tokens, page draws)
+are machine-independent.
+
+Default trace = the acceptance trace: 32 requests x 64-token shared
+prefix, block_size 16. ``--smoke`` shrinks it for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]
+
+
+def _trace(cfg, n_requests: int, prefix_len: int, max_suffix: int):
+    """N prompts sharing a `prefix_len`-token head, ragged 4..max_suffix
+    suffixes (one request repeats the bare prefix — the full-hit/COW
+    path when prefix_len is block-aligned)."""
+    key = jax.random.PRNGKey(42)
+    shared = jax.random.randint(
+        jax.random.fold_in(key, 9999), (prefix_len,), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+    prompts = []
+    for u in range(n_requests):
+        if u == n_requests - 1:
+            prompts.append(shared)  # exact repeat of the shared prefix
+            continue
+        t = 4 + int(jax.random.randint(
+            jax.random.fold_in(key, 500 + u), (), 0, max(max_suffix - 3, 1)
+        ))
+        sfx = jax.random.randint(
+            jax.random.fold_in(key, u), (t,), 0, cfg.vocab_size
+        ).astype(jnp.int32)
+        prompts.append(jnp.concatenate([shared, sfx]))
+    return prompts
+
+
+def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
+           block_size, prefix):
+    from repro.serve import ContinuousBatcher, Request
+
+    cb = ContinuousBatcher(
+        cfg, params, n_slots=n_slots, cache_len=cache_len,
+        paged=True, block_size=block_size, prefix=prefix,
+    )
+    for uid, p in enumerate(prompts):
+        cb.submit(Request(uid=uid, prompt=p, max_new_tokens=new_tokens))
+    t0 = time.perf_counter()
+    results = cb.run_until_drained()
+    dt = time.perf_counter() - t0
+    pc = cb.pcache
+    stats = {
+        "requests": len(results),
+        "decode_tokens": sum(len(v) for v in results.values()),
+        "prefill_tokens": cb.prefill_tokens,
+        "pages_allocated": pc.pages_allocated,
+        "cow_events": pc.cow_events,
+        "ticks": cb.ticks,
+        "wall_s": round(dt, 3),
+    }
+    if prefix:
+        ix = cb.prefix
+        pc.check_invariants(ix.page_refs())
+        stats.update({
+            "index_hits": ix.hits,
+            "index_lookups": ix.lookups,
+            "cached_tokens_served": ix.cached_tokens_served,
+            "pages_indexed": len(ix),
+        })
+    else:
+        pc.check_invariants()
+    return stats, results
+
+
+def prefix_bench(smoke: bool = False) -> List[Row]:
+    from repro.configs import get_config
+    from repro.models import init_lm
+
+    # fp32: greedy-token parity across two differently-shaped prefill
+    # paths needs argmax stability (see tests/test_paged_cache.py)
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b", smoke=True), dtype="float32"
+    )
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    if smoke:
+        n_requests, prefix_len, max_suffix, new_tokens, n_slots = 8, 32, 8, 4, 3
+    else:
+        n_requests, prefix_len, max_suffix, new_tokens, n_slots = 32, 64, 16, 6, 4
+    block_size = 16
+    cache_len = prefix_len + max_suffix + new_tokens + block_size
+    prompts = _trace(cfg, n_requests, prefix_len, max_suffix)
+
+    unshared, res_u = _drain(
+        cfg, params, prompts, n_slots=n_slots, cache_len=cache_len,
+        new_tokens=new_tokens, block_size=block_size, prefix=False,
+    )
+    shared, res_s = _drain(
+        cfg, params, prompts, n_slots=n_slots, cache_len=cache_len,
+        new_tokens=new_tokens, block_size=block_size, prefix=True,
+    )
+
+    tokens_exact = res_u == res_s
+    prefill_reduction = 1.0 - shared["prefill_tokens"] / unshared["prefill_tokens"]
+    page_reduction = 1.0 - shared["pages_allocated"] / unshared["pages_allocated"]
+    report = {
+        "trace": {
+            "n_requests": n_requests, "prefix_len": prefix_len,
+            "max_suffix": max_suffix, "new_tokens": new_tokens,
+            "n_slots": n_slots, "block_size": block_size, "smoke": smoke,
+        },
+        "unshared": unshared,
+        "shared": shared,
+        "tokens_bit_exact": tokens_exact,
+        "prefill_token_reduction": round(prefill_reduction, 3),
+        "page_alloc_reduction": round(page_reduction, 3),
+    }
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "prefix_bench.json"), "w") as f:
+        json.dump(report, f, indent=1)
+
+    if not tokens_exact:
+        raise AssertionError(
+            "prefix-shared serving diverged from unshared greedy tokens"
+        )
+
+    rows: List[Row] = []
+    for mode, st in (("unshared", unshared), ("shared", shared)):
+        derived = (
+            f"prefill_tokens={st['prefill_tokens']};"
+            f"pages={st['pages_allocated']};ticks={st['ticks']};"
+            f"cow={st['cow_events']}"
+        )
+        if mode == "shared":
+            derived += (f";hits={st['index_hits']}/{st['index_lookups']};"
+                        f"cached_tokens={st['cached_tokens_served']}")
+        rows.append((f"prefix/{mode}_{n_requests}req", st["wall_s"] * 1e6,
+                     derived))
+    rows.append((
+        "prefix/reduction", 0.0,
+        f"prefill_tokens=-{prefill_reduction:.0%};"
+        f"pages=-{page_reduction:.0%};tokens_bit_exact={tokens_exact}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI smoke runs")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in prefix_bench(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")

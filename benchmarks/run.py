@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   reduction/* collective schedule byte models
   roofline/*  per-cell roofline terms from the dry-run artifacts
   serve/*     continuous-batching throughput, dense vs paged KV cache
+  prefix/*    shared-prefix serving, prefix-indexed vs unshared paged
 """
 
 from __future__ import annotations
@@ -34,6 +35,7 @@ def main() -> None:
         table8_systems,
         table9_curvefit,
     )
+    from .prefix_bench import prefix_bench
     from .roofline_bench import roofline_bench
     from .serve_bench import serve_bench
 
@@ -41,7 +43,7 @@ def main() -> None:
         table1_frequency, fig1_scaling, table4_reduction, table5_utilization,
         fig5_scalability, table8_systems, fig7_gemv,
         fig7_simulator_validation, table9_curvefit, kernel_bench,
-        reduction_schedule_bench, roofline_bench, serve_bench,
+        reduction_schedule_bench, roofline_bench, serve_bench, prefix_bench,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -52,12 +52,10 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
         cfg, params, n_slots=n_slots, cache_len=cache_len,
         prompt_len=prompt_pad, paged=paged, block_size=block_size,
     )
-    prefill_tokens = 0
     occupancy = []
     for uid, p in enumerate(prompts):
         if not paged and prompt_pad is not None:  # pad to the shared length
             p = jnp.pad(p, (prompt_pad - p.shape[0], 0))
-        prefill_tokens += int(p.shape[0])
         cb.submit(Request(uid=uid, prompt=p, max_new_tokens=new_tokens))
     t0 = time.perf_counter()
     while cb.queue or any(s is not None for s in cb.slots):
@@ -70,7 +68,9 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
     stats = {
         "requests": len(results),
         "decode_tokens": out_tokens,
-        "prefill_tokens": prefill_tokens,
+        # tokens actually run through prefill compute, tracked by the
+        # batcher (paged mode pads ragged prompts to block-size buckets)
+        "prefill_tokens": cb.prefill_tokens,
         "ticks": cb.ticks,
         "wall_s": round(dt, 3),
         "tok_per_s": round(out_tokens / dt, 2),

@@ -27,8 +27,19 @@ tick, and finished requests' pages recycle through a free list.
     cb.submit(Request(uid=1, prompt=long_prompt, max_new_tokens=8))
     results = cb.run_until_drained()
 
+Shared-prefix sharing (DESIGN.md §9): with `prefix=True` the batcher
+indexes every served prompt's full KV pages in a radix trie; requests
+opening with the same tokens map those pages refcounted into their own
+block table and prefill only the uncached suffix (bit-identical greedy
+tokens, far fewer prefill tokens and page draws):
+
+    cb = ContinuousBatcher(cfg, params, n_slots=4, cache_len=64,
+                           paged=True, block_size=16, prefix=True)
+
 CLI:  PYTHONPATH=src python -m repro.launch.serve --paged --quantize
-Bench: PYTHONPATH=src python -m benchmarks.serve_bench  (dense vs paged)
+      PYTHONPATH=src python -m repro.launch.serve --paged --prefix
+Bench: PYTHONPATH=src python -m benchmarks.serve_bench   (dense vs paged)
+       PYTHONPATH=src python -m benchmarks.prefix_bench  (shared prefix)
 """
 
 import time

@@ -4,6 +4,7 @@ bitplane_gemv     decode-shape bit-plane kernel (B untiled)
 bitplane_gemm     prefill/training-shape bit-plane kernel (B tiled)
 pack              digit-plane packing kernel
 paged_attention   paged-decode attention (block-table KV gather)
+paged_prefill     paged-prefill attention (suffix queries, offset causal)
 ops               public jit'd wrappers (dispatch + epilogue)
 ref               pure-jnp oracles
 """
@@ -12,9 +13,11 @@ from .bitplane_gemm import bitplane_gemm
 from .bitplane_gemv import bitplane_gemv
 from .pack import pack_bitplanes
 from .paged_attention import paged_attention, paged_decode_attention
+from .paged_prefill import paged_prefill, paged_prefill_attention
 from . import ops, ref
 
 __all__ = [
     "bitplane_gemm", "bitplane_gemv", "pack_bitplanes",
-    "paged_attention", "paged_decode_attention", "ops", "ref",
+    "paged_attention", "paged_decode_attention",
+    "paged_prefill", "paged_prefill_attention", "ops", "ref",
 ]

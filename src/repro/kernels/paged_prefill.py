@@ -1,0 +1,164 @@
+"""Pallas paged-prefill attention: suffix queries over block-table KV.
+
+The compute half of prefix sharing (DESIGN.md §9). When a request's
+leading tokens hit the prefix index, only the *uncached suffix* runs
+through prefill — but its queries must still attend to the cached-prefix
+pages. This kernel does exactly that: one grid program per slot walks
+the slot's block table, gathers each page with a dynamic load, and folds
+it into an online softmax for **all suffix queries at once**, with an
+offset causal mask — suffix row `t` sits at logical position
+`start + t`, so page row `kv_pos` participates iff
+
+    kv_pos <= start + t          (causality, offset by the cached prefix)
+    kv_pos <  total              (ragged: suffix padding rows are garbage)
+    kv_pos >  start + t - window (sliding window, logical positions)
+
+A cache hit therefore skips the prefix's prefill compute entirely — the
+prefix contributes only page reads — while a miss (start = 0) degenerates
+to ordinary causal paged prefill over the whole prompt.
+
+Layouts:
+    q            [B, T, H, hd]              suffix queries, T padded to a
+                                            block multiple (RoPE applied
+                                            at start + t by the caller)
+    k/v_pages    [n_blocks, bs, KV, hd]     shared pool, suffix KV already
+                                            scattered by the caller
+    block_table  [B, max_blocks] int32      page id of slot b's j-th page
+    start        [B] int32                  cached-prefix length per slot
+    total        [B] int32                  full valid length per slot
+    window       [1] int32                  sliding window (cache capacity
+                                            = full attention)
+
+Like the paged-decode kernel this runs interpret-mode on CPU as the
+correctness tool (kernels/ref.paged_prefill_ref is the oracle). On a
+real TPU the page gather becomes scalar-prefetch + ANY-memory-space DMA
+(PrefetchScalarGridSpec); the block walk and the online-softmax math are
+identical, which is what the parity tests pin down.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(
+    q_ref,        # [1, T, H, hd]
+    kp_ref,       # [n_blocks, bs, KV, hd] — whole pool visible
+    vp_ref,
+    bt_ref,       # [1, max_blocks] int32
+    start_ref,    # [1] int32
+    total_ref,    # [1] int32
+    win_ref,      # [1] int32
+    out_ref,      # [1, T, H, hd] f32
+    *,
+    n_kv: int,
+    block_size: int,
+):
+    t, h, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    g = h // n_kv
+    max_blocks = bt_ref.shape[1]
+    start = start_ref[0]
+    total = total_ref[0]
+    window = win_ref[0]
+    q_pos = start + jax.lax.iota(jnp.int32, t)               # [T]
+    qf = (
+        q_ref[0].reshape(t, n_kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    )
+
+    m = jnp.full((n_kv, g, t), NEG_INF, jnp.float32)
+    l = jnp.zeros((n_kv, g, t), jnp.float32)
+    acc = jnp.zeros((n_kv, g, t, hd), jnp.float32)
+    for j in range(max_blocks):          # static walk; masking does raggedness
+        page = bt_ref[0, j]
+        kj = kp_ref[pl.ds(page, 1)][0].astype(jnp.float32)   # [bs, KV, hd]
+        vj = vp_ref[pl.ds(page, 1)][0].astype(jnp.float32)
+        scores = jnp.einsum("tkgh,skh->kgts", qf, kj)        # [KV, g, T, bs]
+        kv_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        ok = (
+            (kv_pos[None, :] <= q_pos[:, None])
+            & (kv_pos[None, :] < total)
+            & (kv_pos[None, :] > q_pos[:, None] - window)
+        )                                                    # [T, bs]
+        scores = jnp.where(ok[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum("kgts,skh->kgth", p, vj)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]             # [KV, g, T, hd]
+    out_ref[0] = out.transpose(2, 0, 1, 3).reshape(t, h, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(
+    q: jnp.ndarray,            # [B, T, H, hd]
+    k_pages: jnp.ndarray,      # [n_blocks, bs, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32
+    start: jnp.ndarray,        # [B] int32
+    total: jnp.ndarray,        # [B] int32
+    window: jnp.ndarray,       # scalar / [1] int32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pallas entry point; returns f32 [B, T, H, hd] attention outputs."""
+    b, t, h, hd = q.shape
+    n_blocks, bs, n_kv, hd2 = k_pages.shape
+    assert hd2 == hd, (hd2, hd)
+    assert h % n_kv == 0, (h, n_kv)
+    mb = block_table.shape[1]
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    kernel = functools.partial(
+        _paged_prefill_kernel, n_kv=n_kv, block_size=bs
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, h, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, mb), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, t, h, hd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k_pages, v_pages, block_table.astype(jnp.int32),
+      jnp.asarray(start, jnp.int32), jnp.asarray(total, jnp.int32), win)
+
+
+def paged_prefill(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,
+    start: jnp.ndarray,
+    total: jnp.ndarray,
+    window: jnp.ndarray,
+    *,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Impl dispatch, mirroring kernels.ops: `auto` uses the jnp oracle on
+    CPU (dry-run lowering) and the Pallas kernel on TPU;
+    `pallas_interpret` forces the kernel body through the interpreter."""
+    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return ref.paged_prefill_ref(
+            q, k_pages, v_pages, block_table, start, total, window
+        )
+    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
+    return paged_prefill_attention(
+        q, k_pages, v_pages, block_table, start, total, window,
+        interpret=interpret,
+    )

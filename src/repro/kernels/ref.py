@@ -176,3 +176,48 @@ def paged_attention_ref(
     acc = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, h, hd)
+
+
+def paged_prefill_ref(
+    q: jnp.ndarray,            # [B, T, H, hd] — suffix queries (T padded)
+    k_pages: jnp.ndarray,      # [n_blocks, block_size, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32 page ids per slot
+    start: jnp.ndarray,        # [B] int32 — position of the first suffix token
+    total: jnp.ndarray,        # [B] int32 — full valid length (prefix + suffix)
+    window: jnp.ndarray,       # scalar int32; kv_pos > q_pos - window
+) -> jnp.ndarray:
+    """Oracle for the paged-prefill kernel (DESIGN.md §9): suffix query
+    row t sits at logical position `start + t` and attends, through the
+    block table, to every cached-prefix AND fresh-suffix position up to
+    itself — the offset causal mask `kv_pos <= start + t` — clipped to
+    `kv_pos < total` (suffix padding rows hold garbage KV) and the
+    sliding window. The suffix KV must already be scattered into the
+    pools. Padded query rows (start + t >= total) produce don't-care
+    outputs; same `acc / max(l, eps)` epilogue as the decode oracle.
+    """
+    b, t, h, hd = q.shape
+    _, bs, kv, _ = k_pages.shape
+    mb = block_table.shape[1]
+    g = h // kv
+    k = k_pages[block_table].reshape(b, mb * bs, kv, hd)   # [B, S, KV, hd]
+    v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    kv_pos = jnp.arange(mb * bs, dtype=jnp.int32)[None, None, :]
+    q_pos = (start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :])[..., None]
+    ok = (
+        (kv_pos <= q_pos)
+        & (kv_pos < total[:, None, None])
+        & (kv_pos > q_pos - window)
+    )                                                       # [B, T, S]
+    scores = jnp.einsum(
+        "btkgh,bskh->bkgts",
+        q.reshape(b, t, kv, g, hd).astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * (hd ** -0.5)
+    scores = jnp.where(ok[:, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgts,bskh->bkgth", p, v.astype(jnp.float32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, hd)

@@ -9,6 +9,11 @@ lengths are drawn ragged per request (no shared padded length), slots
 refill at any tick, and finished requests' pages recycle through the
 free list. Without --paged the dense cache requires one shared
 --prompt-len.
+
+--prefix (requires --paged) enables the shared-prefix radix index
+(DESIGN.md §9): every request's prompt opens with a common
+--shared-prefix-len system prompt, whose KV pages are stored and
+prefilled once and mapped refcounted into every later request.
 """
 
 from __future__ import annotations
@@ -40,7 +45,16 @@ def main():
                          "refill at any tick, page recycling")
     ap.add_argument("--block-size", type=int, default=16,
                     help="KV page size in tokens (--paged)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="shared-prefix radix index: dedup + skip prefill "
+                         "of the common prompt prefix (requires --paged)")
+    ap.add_argument("--shared-prefix-len", type=int, default=32,
+                    help="tokens of common system prompt prepended to "
+                         "every request (--prefix demo trace)")
     args = ap.parse_args()
+    if args.prefix and not args.paged:
+        ap.error("--prefix requires --paged (the prefix index shares "
+                 "pages of the block-paged KV cache)")
 
     cfg = get_config(args.arch, smoke=True)
     params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -52,13 +66,17 @@ def main():
         print(f"PIM-quantized: {frac:.1%} of param bytes packed "
               f"({args.bits}-bit, group={args.group})")
 
-    cache_len = args.prompt_len + args.new_tokens + 8
+    shared_len = args.shared_prefix_len if args.prefix else 0
+    cache_len = shared_len + args.prompt_len + args.new_tokens + 8
     batcher = ContinuousBatcher(
         cfg, params, n_slots=args.slots, cache_len=cache_len,
         prompt_len=None if args.paged else args.prompt_len,
-        paged=args.paged, block_size=args.block_size,
+        paged=args.paged, block_size=args.block_size, prefix=args.prefix,
     )
     key = jax.random.PRNGKey(1)
+    shared = jax.random.randint(
+        jax.random.fold_in(key, 9999), (shared_len,), 0, cfg.vocab_size
+    ).astype(jnp.int32)
     for uid in range(args.requests):
         if args.paged:  # ragged: anywhere from 4 tokens up to --prompt-len
             t = 4 + int(jax.random.randint(
@@ -69,6 +87,8 @@ def main():
         prompt = jax.random.randint(
             jax.random.fold_in(key, uid), (t,), 0, cfg.vocab_size
         ).astype(jnp.int32)
+        if args.prefix:  # every request opens with the shared system prompt
+            prompt = jnp.concatenate([shared, prompt])
         batcher.submit(Request(uid=uid, prompt=prompt,
                                max_new_tokens=args.new_tokens))
     t0 = time.perf_counter()
@@ -79,6 +99,15 @@ def main():
     print(f"served {len(results)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, {mode} cache, "
           f"CPU smoke config)")
+    if args.paged:
+        pc = batcher.pcache
+        print(f"  prefill tokens processed: {batcher.prefill_tokens}, "
+              f"pages allocated: {pc.pages_allocated}, COW: {pc.cow_events}")
+    if args.prefix:
+        ix = batcher.prefix
+        print(f"  prefix index: {ix.hits}/{ix.lookups} hits, "
+              f"{ix.cached_tokens_served} prompt tokens served from cache, "
+              f"{len(ix)} pages indexed")
     for uid in sorted(results)[:3]:
         print(f"  req {uid}: {results[uid]}")
 

@@ -9,6 +9,7 @@ from .transformer import (
     init_lm,
     init_paged_pool,
     prefill,
+    prefill_paged,
 )
 from .encdec import (
     decode_step_encdec,
@@ -20,7 +21,7 @@ from .encdec import (
 
 __all__ = [
     "count_params", "decode_step", "decode_step_paged", "forward",
-    "init_cache", "init_lm", "init_paged_pool", "prefill",
+    "init_cache", "init_lm", "init_paged_pool", "prefill", "prefill_paged",
     "decode_step_encdec", "forward_encdec", "init_encdec",
     "init_encdec_cache", "prefill_encdec",
 ]

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.paged_attention import paged_attention
+from ..kernels.paged_prefill import paged_prefill
 from ..quant.bitplane import pim_linear
 from .common import NEG_INF, Params, apply_rope, dense_init, split_keys
 
@@ -304,6 +305,59 @@ def attention_decode_paged(
         q[:, 0], k_pages, v_pages, block_table, positions + 1, win, impl=impl
     )                                                        # [B, H, hd] f32
     out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
+    return pim_linear(out, params["wo"]), k_pages, v_pages
+
+
+def attention_prefill_paged(
+    params: Params,
+    x: jnp.ndarray,             # [B, T, D] — uncached suffix tokens (T padded)
+    start: jnp.ndarray,         # [B] int32 — cached-prefix length per slot
+    total: jnp.ndarray,         # [B] int32 — full valid length per slot
+    k_pages: jnp.ndarray,       # [n_blocks, bs, KV, hd] shared page pool
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,   # [B, max_blocks] int32
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Suffix prefill against a block-paged cache (DESIGN.md §9).
+
+    Suffix token t sits at logical position `start + t`: RoPE rotates at
+    that offset, its KV scatters into page
+    `block_table[b, (start+t) // bs]` at offset `(start+t) % bs`, and
+    attention runs over the cached prefix pages *and* the fresh suffix
+    with the offset causal mask. Padding rows (start + t >= total) write
+    garbage KV beyond the slot's length (masked everywhere, overwritten
+    by later decode scatters) or into the scratch page when they fall
+    past the slot's allocated blocks.
+    """
+    b, t, _ = x.shape
+    bs = k_pages.shape[1]
+    mb = block_table.shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    block_idx = positions // bs                              # [B, T]
+    page = jnp.take_along_axis(
+        block_table, jnp.minimum(block_idx, mb - 1), axis=1
+    )
+    # padding rows past the table's capacity must land in scratch, NOT
+    # clamp into the slot's (valid) last page
+    page = jnp.where(block_idx < mb, page, 0)
+    offset = positions % bs
+    k_pages = k_pages.at[page, offset].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page, offset].set(v.astype(v_pages.dtype))
+    capacity = mb * bs
+    win = jnp.asarray(capacity if window is None else window, jnp.int32)
+    out = paged_prefill(
+        q, k_pages, v_pages, block_table, start, total, win, impl=impl
+    )                                                        # [B, T, H, hd] f32
+    out = out.reshape(b, t, n_heads * head_dim).astype(x.dtype)
     return pim_linear(out, params["wo"]), k_pages, v_pages
 
 

@@ -36,6 +36,7 @@ from .attention import (
     attention_decode_paged,
     attention_forward,
     attention_prefill,
+    attention_prefill_paged,
     init_attention,
 )
 from .common import Params, compute_dtype, embed_init, rmsnorm, rmsnorm_params, split_keys
@@ -638,6 +639,65 @@ def decode_step_paged(
         body, x, (params["layers"], windows, k_pages, v_pages)
     )
     logits = _head(params, x, cfg)
+    return logits, k_pages, v_pages
+
+
+def prefill_paged(
+    params: Params,
+    tokens: jnp.ndarray,       # [B, T] int32 — uncached suffix (T padded)
+    k_pages: jnp.ndarray,      # [L, n_blocks, bs, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32 (shared across layers)
+    start: jnp.ndarray,        # [B] int32 — cached-prefix length per slot
+    total: jnp.ndarray,        # [B] int32 — full valid length per slot
+    cfg: ModelConfig,
+    last_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill only the uncached suffix directly into the paged pools
+    (DESIGN.md §9): the suffix KV scatters through the block table
+    in-graph — no dense cache allocation, no host round trip — and each
+    layer's attention covers the cached prefix pages via the paged-prefill
+    kernel's offset causal mask. With start = 0 this is a full paged
+    prefill; with a prefix hit the cached pages contribute reads only.
+
+    `last_pos` (dynamic scalar, suffix-relative) selects which suffix
+    position's logits to return instead of T-1 — callers right-pad ragged
+    suffixes to a block-size bucket and pass the true suffix end.
+    """
+    if cfg.block_kind != "attn":
+        raise ValueError("prefill_paged supports attention stacks only")
+    dt = compute_dtype(cfg.dtype)
+    x = _embed(params, tokens, cfg, None)
+    capacity = block_table.shape[1] * k_pages.shape[2]
+    windows = _window_array(cfg, capacity)
+
+    def body(xc, xs):
+        lp, w, kp, vp = xs
+        h, kp, vp = attention_prefill_paged(
+            lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), start, total,
+            kp, vp, block_table, window=w, **_attn_kwargs(cfg),
+        )
+        xc = xc + h
+        hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        if cfg.n_experts:
+            h2, _ = moe_forward(
+                lp["moe"], hin, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, act=cfg.act,
+            )
+        else:
+            h2 = _ffn(lp, hin, cfg)
+        return xc + h2, (kp, vp)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["layers"], windows, k_pages, v_pages)
+    )
+    if last_pos is None:
+        xe = x[:, -1:]
+    else:
+        xe = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32), 1, axis=1
+        )
+    logits = _head(params, xe, cfg)
     return logits, k_pages, v_pages
 
 

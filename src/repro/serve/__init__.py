@@ -1,8 +1,9 @@
 from .engine import ServeConfig, ServeEngine
 from .paged_cache import SCRATCH_PAGE, PagedKVCache
+from .prefix_cache import PrefixIndex
 from .scheduler import ContinuousBatcher, Request
 
 __all__ = [
     "ServeConfig", "ServeEngine", "ContinuousBatcher", "Request",
-    "PagedKVCache", "SCRATCH_PAGE",
+    "PagedKVCache", "PrefixIndex", "SCRATCH_PAGE",
 ]

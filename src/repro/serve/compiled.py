@@ -1,0 +1,35 @@
+"""Shared jitted closures over the paged model entry points.
+
+`ServeEngine` and `ContinuousBatcher` drive the same two compiled
+functions (suffix prefill into the page pools, one-token paged decode);
+building them here keeps the `models.prefill_paged` /
+`models.decode_step_paged` call signatures in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..configs.base import ModelConfig
+from ..models import decode_step_paged, prefill_paged
+
+
+def jit_paged_prefill(cfg: ModelConfig):
+    """(params, toks, k_pages, v_pages, block_table, start, total,
+    last_pos) -> (logits, k_pages, v_pages). Retraces once per padded
+    suffix-length bucket (`toks.shape`)."""
+    return jax.jit(
+        lambda p, toks, kp, vp, bt, st, tot, lp: prefill_paged(
+            p, toks, kp, vp, bt, st, tot, cfg, last_pos=lp
+        )
+    )
+
+
+def jit_paged_decode(cfg: ModelConfig):
+    """(params, token, k_pages, v_pages, block_table, positions) ->
+    (logits, k_pages, v_pages)."""
+    return jax.jit(
+        lambda p, t, kp, vp, bt, pos: decode_step_paged(
+            p, t, kp, vp, bt, pos, cfg
+        )
+    )

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, decode_step_paged, init_cache, prefill
+from ..models import decode_step, init_cache, prefill
 from ..quant.bitplane import PimQuantConfig, quantize_tree, tree_packed_fraction
+from .compiled import jit_paged_decode, jit_paged_prefill
 from .paged_cache import PagedKVCache
 
 
@@ -46,11 +47,8 @@ class ServeEngine:
             lambda p, t: prefill(p, t, cfg, cache_len=serve_cfg.max_cache_len)
         )
         self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
-        self._decode_paged = jax.jit(
-            lambda p, t, kp, vp, bt, pos: decode_step_paged(
-                p, t, kp, vp, bt, pos, cfg
-            )
-        )
+        self._decode_paged = jit_paged_decode(cfg)
+        self._prefill_paged = jit_paged_prefill(cfg)
 
     def quantize(self, qcfg: Optional[PimQuantConfig] = None) -> float:
         """Convert projection weights to PIM-resident bit-planes."""
@@ -81,27 +79,38 @@ class ServeEngine:
     def _generate_paged(
         self, prompts: jnp.ndarray, rng: Optional[jax.Array]
     ) -> jnp.ndarray:
+        """Paged generation end-to-end: prefill writes straight into the
+        page pools through the block table (models.prefill_paged) — no
+        dense cache allocation and no device→host→device copy of the
+        prompt KV, which the old path paid per generate call."""
         b, t = prompts.shape
-        logits, cache = self._prefill(self.params, prompts)
+        bs = self.sc.block_size
         pc = PagedKVCache(
             self.cfg, n_slots=b, max_len=self.sc.max_cache_len,
-            block_size=self.sc.block_size,
+            block_size=bs,
         )
         for i in range(b):
             pc.alloc_slot(i, t)
-            pc.write_prefill(i, cache["k"][:, i], cache["v"][:, i], t)
+        pad = -(-t // bs) * bs
+        toks = jnp.pad(prompts, ((0, 0), (0, pad - t)))
+        zeros = jnp.zeros((b,), jnp.int32)
+        logits, pc.k_pages, pc.v_pages = self._prefill_paged(
+            self.params, toks, pc.k_pages, pc.v_pages,
+            pc.device_block_table(), zeros, zeros + t,
+            jnp.asarray(t - 1, jnp.int32),
+        )
+        pc.lengths[:] = t
         out = []
         tok = self._sample(logits[:, -1], rng)
         for _ in range(self.sc.max_new_tokens):
             out.append(tok)
             for i in range(b):
-                pc.ensure_capacity(i, int(pc.lengths[i]) + 1)
+                pc.begin_append(i, int(pc.lengths[i]), 1)
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, tok, pc.k_pages, pc.v_pages,
                 pc.device_block_table(), pc.device_positions(),
             )
-            for i in range(b):
-                pc.append_position(i)
+            pc.lengths[:] += 1
             tok = self._sample(logits[:, -1], rng)
         return jnp.concatenate(out, axis=-1)
 

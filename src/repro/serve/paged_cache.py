@@ -1,4 +1,4 @@
-"""Block-paged KV cache for continuous batching (DESIGN.md §8).
+"""Block-paged KV cache for continuous batching (DESIGN.md §8-§9).
 
 The dense serving cache keeps one global write position, which forces
 every request in a batch to share a padded prompt length and corrupts KV
@@ -8,6 +8,14 @@ per-slot block table maps logical position `p` to page
 `block_table[slot, p // block_size]`, and each slot tracks its own
 length. Alloc/free is a host-side free list — refilling a finished slot
 recycles its pages without touching any other slot's KV.
+
+Pages are **refcounted** (DESIGN.md §9): a physical page may back the
+same logical prefix of several slots (prefix sharing via
+`serve/prefix_cache.py`) and/or be retained by the prefix index itself.
+A page returns to the LIFO free list only when its refcount reaches
+zero, and any write into a page whose refcount exceeds one first goes
+through copy-on-write (`_make_writable`): the writer gets a private
+copy, the other sharers keep the original bytes.
 
 Page 0 is reserved as a scratch page: inactive slots keep an all-zero
 block table, so the decode step's unconditional KV scatter for idle batch
@@ -20,7 +28,7 @@ jitted decode step; table/length bookkeeping is tiny host-side numpy.
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -69,10 +77,18 @@ class PagedKVCache:
             range(1, self.n_blocks)
         )
         self._owned: List[List[int]] = [[] for _ in range(n_slots)]
-        #: admission control: worst-case block counts promised to active
-        #: slots (reserve_slot) — ensure_capacity can then never exhaust
-        #: the pool mid-run
+        #: refcount per allocated (non-free) page: number of slots whose
+        #: block table lists it + external retains (prefix index)
+        self._ref: Dict[int, int] = {}
+        #: admission control: pool draws promised to active slots
+        #: (reserve_slot) vs pool draws actually made (_drawn) — so
+        #: ensure_capacity / COW can never exhaust the pool mid-run
         self._reserved: Dict[int, int] = {}
+        self._drawn: Dict[int, int] = collections.defaultdict(int)
+        #: lifetime counters (benchmarks): pages popped from the free
+        #: list, and copy-on-write events
+        self.pages_allocated = 0
+        self.cow_events = 0
 
     # -- invariant helpers -------------------------------------------------
 
@@ -83,19 +99,41 @@ class PagedKVCache:
     def owned_blocks(self, slot: int) -> Tuple[int, ...]:
         return tuple(self._owned[slot])
 
-    def check_invariants(self) -> None:
-        """Every non-scratch page is owned by exactly one slot XOR free."""
-        seen = set()
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def is_shared(self, page: int) -> bool:
+        return self._ref.get(page, 0) > 1
+
+    def check_invariants(
+        self, external_refs: Optional[Dict[int, int]] = None
+    ) -> None:
+        """Every non-scratch page is free XOR refcounted, and each page's
+        refcount equals the number of slots listing it plus its external
+        (prefix-index) retains. Pass `external_refs` (page -> count, e.g.
+        `PrefixIndex.page_refs()`) to pin the split exactly; without it
+        the external part is only checked to be non-negative."""
+        slot_holds: Dict[int, int] = collections.defaultdict(int)
         for slot, blocks in enumerate(self._owned):
             n = int(self.lengths[slot])
             assert len(blocks) * self.block_size >= n, (slot, blocks, n)
             for j, b in enumerate(blocks):
-                assert b != SCRATCH_PAGE and b not in seen, (slot, b)
+                assert b != SCRATCH_PAGE, (slot, j)
                 assert int(self.block_table[slot, j]) == b, (slot, j)
-                seen.add(b)
+                slot_holds[b] += 1
+        allocated = set(self._ref)
         free = set(self.free_blocks)
-        assert not (seen & free), seen & free
-        assert seen | free == set(range(1, self.n_blocks)), "leaked pages"
+        assert len(free) == len(self.free_blocks), "duplicate free pages"
+        assert not (allocated & free), allocated & free
+        assert allocated | free == set(range(1, self.n_blocks)), "leaked pages"
+        for p, r in self._ref.items():
+            assert r >= 1, (p, r)
+            held = slot_holds.get(p, 0)
+            assert r >= held, (p, r, held)
+            if external_refs is not None:
+                assert r == held + external_refs.get(p, 0), (p, r, held)
+        for p, held in slot_holds.items():
+            assert p in self._ref, p
         assert self.available_blocks() >= 0, "over-committed reservations"
 
     # -- alloc / free ------------------------------------------------------
@@ -106,27 +144,68 @@ class PagedKVCache:
     def available_blocks(self) -> int:
         """Free blocks not promised to an active slot's reservation."""
         outstanding = sum(
-            r - len(self._owned[s]) for s, r in self._reserved.items()
+            r - self._drawn[s] for s, r in self._reserved.items()
         )
         return self.n_free - outstanding
 
     def can_fit(self, n_tokens: int) -> bool:
         return self.available_blocks() >= self._blocks_for(n_tokens)
 
-    def reserve_slot(self, slot: int, n_tokens: int) -> bool:
-        """Admission control: promise `slot` enough pages for `n_tokens`
-        total positions (prompt + all future decode tokens). Returns False
-        when the pool cannot honor the promise right now; after True,
-        ensure_capacity up to `n_tokens` is guaranteed not to exhaust."""
+    def draws_for(self, n_tokens: int, n_shared: int = 0,
+                  n_cow: int = 0) -> int:
+        """Pool draws a slot needs for `n_tokens` positions when its
+        first `n_shared` pages arrive via attach_shared and up to `n_cow`
+        of them may be copy-on-written — the single home of the
+        admission draw formula (reserve_slot and the scheduler's
+        eviction-deficit computation both use it)."""
+        return self._blocks_for(n_tokens) - n_shared + n_cow
+
+    def _pop_free(self, slot: int) -> int:
+        if not self.free_blocks:
+            raise MemoryError("paged KV pool exhausted")
+        b = self.free_blocks.popleft()
+        self._ref[b] = 1
+        self._drawn[slot] += 1
+        self.pages_allocated += 1
+        return b
+
+    def retain(self, page: int) -> None:
+        """Add an external reference (prefix index) to an allocated page."""
+        assert page in self._ref, f"retain of unallocated page {page}"
+        self._ref[page] += 1
+
+    def release(self, page: int) -> None:
+        """Drop one reference; recycle the page at refcount zero (LIFO, so
+        just-released pages are reused first — they are the likeliest to
+        still be resident in any cache tier)."""
+        r = self._ref[page] - 1
+        if r:
+            self._ref[page] = r
+        else:
+            del self._ref[page]
+            self.free_blocks.appendleft(page)
+
+    def reserve_slot(
+        self, slot: int, n_tokens: int, n_shared: int = 0, n_cow: int = 0
+    ) -> bool:
+        """Admission control: promise `slot` enough pool draws for
+        `n_tokens` total positions (prompt + all future decode tokens),
+        of which the first `n_shared` pages arrive via `attach_shared`
+        (no pool draw) and up to `n_cow` shared pages may need a
+        copy-on-write draw. Returns False when the pool cannot honor the
+        promise right now; after True, growth up to `n_tokens` (including
+        COW) is guaranteed not to exhaust the pool."""
         need = self._blocks_for(n_tokens)
         if need > self.max_blocks_per_slot:
             raise ValueError(
                 f"slot {slot}: {n_tokens} tokens exceed max "
                 f"{self.max_blocks_per_slot * self.block_size}"
             )
-        if not self.can_fit(n_tokens):
+        draws = self.draws_for(n_tokens, n_shared, n_cow)
+        if self.available_blocks() < draws:
             return False
-        self._reserved[slot] = need
+        self._reserved[slot] = draws
+        self._drawn[slot] = 0
         return True
 
     def alloc_slot(self, slot: int, n_tokens: int) -> None:
@@ -134,6 +213,20 @@ class PagedKVCache:
         empty (length 0 — the caller writes KV then sets the length)."""
         assert not self._owned[slot], f"slot {slot} already allocated"
         self.ensure_capacity(slot, n_tokens)
+
+    def attach_shared(self, slot: int, pages: Sequence[int]) -> None:
+        """Map an already-allocated page run (a prefix-index hit) as the
+        leading blocks of `slot`'s table. Each page's refcount is bumped;
+        no pool draw happens. The slot must be empty."""
+        assert not self._owned[slot], f"slot {slot} already allocated"
+        if len(pages) > self.max_blocks_per_slot:
+            raise ValueError(f"slot {slot}: {len(pages)} shared pages "
+                             f"exceed max {self.max_blocks_per_slot}")
+        for j, p in enumerate(pages):
+            assert p != SCRATCH_PAGE and p in self._ref, p
+            self._ref[p] += 1
+            self.block_table[slot, j] = p
+            self._owned[slot].append(p)
 
     def ensure_capacity(self, slot: int, n_tokens: int) -> None:
         """Grow `slot`'s block list to cover `n_tokens` positions."""
@@ -144,57 +237,116 @@ class PagedKVCache:
                 f"{self.max_blocks_per_slot * self.block_size}"
             )
         while len(self._owned[slot]) < need:
-            if not self.free_blocks:
-                raise MemoryError("paged KV pool exhausted")
-            b = self.free_blocks.popleft()
+            b = self._pop_free(slot)
             self.block_table[slot, len(self._owned[slot])] = b
             self._owned[slot].append(b)
 
     def free_slot(self, slot: int) -> None:
-        """Recycle all of `slot`'s pages back to the free list (LIFO, so
-        just-released pages are reused first — they are the likeliest to
-        still be resident in any cache tier)."""
-        self.free_blocks.extendleft(reversed(self._owned[slot]))
+        """Drop the slot's reference on each of its pages; exclusively
+        owned pages recycle to the free list, shared ones live on with
+        the remaining holders."""
+        for p in self._owned[slot]:
+            self.release(p)
         self._owned[slot] = []
         self._reserved.pop(slot, None)
+        self._drawn.pop(slot, None)
         self.block_table[slot, :] = SCRATCH_PAGE
         self.lengths[slot] = 0
 
+    # -- copy-on-write -----------------------------------------------------
+
+    def _make_writable(self, slot: int, block_idx: int) -> None:
+        """Copy-on-write: if `slot`'s `block_idx`-th page is shared, give
+        the slot a private copy (device-side page copy) and drop its
+        reference on the original — the other sharers' bytes are never
+        touched in place."""
+        old = self._owned[slot][block_idx]
+        if self._ref[old] <= 1:
+            return
+        new = self._pop_free(slot)
+        # one functional update per pool: copy the old page's rows across
+        # every layer into the fresh page
+        self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
+        self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
+        self._ref[old] -= 1
+        self._owned[slot][block_idx] = new
+        self.block_table[slot, block_idx] = new
+        self.cow_events += 1
+
+    def begin_append(self, slot: int, start: int, n_tokens: int) -> None:
+        """Prepare `slot` for writes covering positions
+        [start, start + n_tokens): grow capacity and COW any shared page
+        in the touched range. Must be called (host-side) before a jitted
+        suffix-prefill or decode scatter so the device block table the
+        jit sees already points at writable pages."""
+        if n_tokens <= 0:
+            return
+        self.ensure_capacity(slot, start + n_tokens)
+        bs = self.block_size
+        first = start // bs
+        last = (start + n_tokens - 1) // bs
+        for j in range(first, min(last + 1, len(self._owned[slot]))):
+            self._make_writable(slot, j)
+
     # -- KV data movement --------------------------------------------------
 
-    def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
-                      n_tokens: int) -> None:
-        """Scatter a prefilled dense cache row into `slot`'s pages.
+    def write_suffix(self, slot: int, k: jnp.ndarray, v: jnp.ndarray,
+                     start: int, n_tokens: int) -> None:
+        """Scatter `n_tokens` KV rows into `slot`'s pages at logical
+        positions [start, start + n_tokens) — the host-side suffix writer
+        (the jitted paged-prefill path scatters in-graph instead).
 
-        k/v: [L, S, KV, hd] with the first `n_tokens` positions valid (the
-        output of models.prefill for one request). Allocates as needed.
+        `start` must be page-aligned unless it targets the slot's last
+        shared page (the full-prefix-hit recompute, which COWs first).
+        k/v: [L, S, KV, hd] with the first `n_tokens` rows valid.
+        Allocates and copy-on-writes as needed; sets the slot length to
+        `start + n_tokens`.
         """
         bs = self.block_size
-        self.ensure_capacity(slot, n_tokens)
-        n_pages = self._blocks_for(n_tokens)
-        pad = n_pages * bs
+        self.begin_append(slot, start, n_tokens)
+        end = start + n_tokens
+        first = start // bs
+        n_pages = -(-end // bs) - first
+        lo = first * bs                      # page-aligned window start
+        lead = start - lo
+        pad = n_pages * bs - lead - n_tokens
         l, _, kvh, hd = k.shape
         # one scatter per pool (not per page — a functional .at update
         # copies the whole pool, so per-page loops cost O(n_pages) copies);
-        # zero-padding the ragged tail is fine: those rows sit beyond the
-        # slot's length (masked) until a decode scatter overwrites them
-        pages = jnp.asarray(np.array(self._owned[slot][:n_pages]))
+        # the lead rows re-write what the window's first page already
+        # holds and the tail padding sits beyond the slot's length
+        # (masked) until a decode scatter overwrites it
+        pages = jnp.asarray(
+            np.array(self._owned[slot][first:first + n_pages])
+        )
 
-        def scatter(pool, src):
-            src = jnp.pad(src[:, :n_tokens], ((0, 0), (0, pad - n_tokens),
-                                              (0, 0), (0, 0)))
+        def scatter(pool, src, cur):
+            head = cur[:, :lead] if lead else src[:, :0]
+            src = jnp.concatenate(
+                [head.astype(src.dtype), src[:, :n_tokens]], axis=1
+            )
+            src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
             src = src.reshape(l, n_pages, bs, kvh, hd).astype(pool.dtype)
             return pool.at[:, pages].set(src)
 
-        self.k_pages = scatter(self.k_pages, k)
-        self.v_pages = scatter(self.v_pages, v)
-        self.lengths[slot] = n_tokens
+        # head rows live entirely in the window's first page (lead < bs)
+        cur_k = self._gather_window(self.k_pages, pages[:1]) if lead else None
+        cur_v = self._gather_window(self.v_pages, pages[:1]) if lead else None
+        self.k_pages = scatter(self.k_pages, k, cur_k)
+        self.v_pages = scatter(self.v_pages, v, cur_v)
+        self.lengths[slot] = end
+
+    def _gather_window(self, pool: jnp.ndarray, pages: jnp.ndarray):
+        l = pool.shape[0]
+        bs, kvh, hd = pool.shape[2], pool.shape[3], pool.shape[4]
+        return pool[:, pages].reshape(l, pages.shape[0] * bs, kvh, hd)
 
     def append_position(self, slot: int) -> None:
         """Account one decoded token (the KV scatter itself happens inside
         decode_step_paged); grows the page list when the slot crosses a
-        block boundary."""
-        self.ensure_capacity(slot, int(self.lengths[slot]) + 1)
+        block boundary and copy-on-writes a shared tail page — the write
+        target must be exclusively owned BEFORE the jitted scatter runs."""
+        self.begin_append(slot, int(self.lengths[slot]), 1)
         self.lengths[slot] += 1
 
     # -- device views ------------------------------------------------------

@@ -1,0 +1,221 @@
+"""Prefix radix index: shared-prefix KV dedup for the paged cache.
+
+Requests that open with the same tokens (system prompts, few-shot
+headers) should never store the same KV bytes twice, and — with the
+paged-prefill kernel — should never *compute* them twice either. The
+index is a radix trie over **full KV pages**: each node corresponds to
+one `block_size`-token block of some previously-served prompt, keyed by
+the block's token content, and records the physical page holding that
+block's KV. A child is only meaningful under its parent (the KV of a
+block depends on every token before it), so the trie edge structure *is*
+the correctness argument: a lookup walks the prompt block-by-block from
+the root and can only hand out pages whose entire token history matches.
+
+Reference discipline: the index holds one retain (`PagedKVCache.retain`)
+on every page it maps, so pages survive the slot that produced them and
+later requests can hit them. Slots that attach a hit add their own
+reference; a page recycles only when the last holder — slot or index —
+releases it. Writes into shared pages go through copy-on-write in the
+cache layer, so published bytes are immutable.
+
+Eviction: when admission fails for want of pages, the scheduler calls
+`evict` — leaf nodes whose page is referenced by nobody but the index
+are released, oldest-touched first (removing a leaf may expose its
+parent, so the walk repeats until satisfied or stuck). Smarter policies
+(size-aware, hit-rate-aware) are a recorded ROADMAP follow-on.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .paged_cache import PagedKVCache
+
+
+class _Node:
+    __slots__ = ("key", "page", "parent", "children", "stamp")
+
+    def __init__(self, key, page: int, parent: Optional["_Node"]):
+        self.key = key                  # tuple of block_size token ids
+        self.page = page                # physical page holding this block's KV
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.stamp = 0                  # last-touched tick (eviction order)
+
+
+class PrefixIndex:
+    """Radix/trie index from full-page token prefixes to physical pages."""
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.root = _Node(key=None, page=-1, parent=None)
+        self._clock = 0
+        # stats (surfaced by benchmarks/prefix_bench.py). hits/lookups
+        # count ADMITTED requests — the scheduler bumps them once per
+        # admission, not once per (possibly retried) lookup attempt
+        self.lookups = 0
+        self.hits = 0                   # admitted requests with >= 1 page hit
+        self.cached_tokens_served = 0   # prompt tokens skipped via hits
+        self.evicted_pages = 0
+
+    # -- helpers -----------------------------------------------------------
+
+    def block_keys(self, tokens) -> List[Tuple[int, ...]]:
+        """The prompt's full-block trie keys. Callers that probe the same
+        prompt repeatedly (a queued request re-tried every admission
+        tick) should compute this once and pass it to
+        `lookup`/`publish` — the tuple construction is the O(prompt)
+        part of a probe."""
+        toks = np.asarray(tokens).reshape(-1)
+        bs = self.block_size
+        return [
+            tuple(int(x) for x in toks[i: i + bs])
+            for i in range(0, (len(toks) // bs) * bs, bs)
+        ]
+
+    def __len__(self) -> int:
+        n, stack = 0, [self.root]
+        while stack:
+            node = stack.pop()
+            n += len(node.children)
+            stack.extend(node.children.values())
+        return n
+
+    def page_refs(self) -> Dict[int, int]:
+        """page -> number of index retains (for invariant checking)."""
+        refs: Dict[int, int] = collections.defaultdict(int)
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for c in node.children.values():
+                refs[c.page] += 1
+                stack.append(c)
+        return dict(refs)
+
+    # -- lookup / publish --------------------------------------------------
+
+    def lookup(self, tokens, keys: Optional[List[Tuple[int, ...]]] = None
+               ) -> List[int]:
+        """Longest full-page prefix match: physical pages for the leading
+        blocks of `tokens` whose entire history is cached. The caller
+        decides how many of them to actually share (it must keep at least
+        one prompt token to prefill — see `split_prompt`). Pass
+        precomputed `keys` (`block_keys`) to skip re-tokenizing."""
+        self._clock += 1
+        node, pages = self.root, []
+        for key in keys if keys is not None else self.block_keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.stamp = self._clock
+            pages.append(child.page)
+            node = child
+        return pages
+
+    def split_prompt(self, tokens, pages: List[int]) -> Tuple[int, bool]:
+        """Given a `lookup` result, return `(n_cached, needs_cow)`:
+        `n_cached` prompt tokens are served from the shared pages and the
+        suffix `tokens[n_cached:]` must still be prefilled. At least one
+        token is always left to prefill (the model needs a forward pass
+        to produce next-token logits), so a hit covering the *entire*
+        prompt recomputes its final token — whose KV write lands mid-page
+        in the last shared page, the copy-on-write case (`needs_cow`)."""
+        t = int(np.asarray(tokens).reshape(-1).shape[0])
+        n_cached = min(len(pages) * self.block_size, t - 1)
+        needs_cow = bool(n_cached % self.block_size)
+        return n_cached, needs_cow
+
+    def publish(self, tokens, cache: PagedKVCache, slot: int,
+                keys: Optional[List[Tuple[int, ...]]] = None) -> int:
+        """Insert the prompt's full-page blocks, backed by `slot`'s pages,
+        after its prefill completed. Already-indexed blocks are kept as-is
+        (first writer wins — the bytes are equivalent by construction);
+        each newly-indexed page gets one index retain. Returns the number
+        of pages newly published."""
+        self._clock += 1
+        node, added = self.root, 0
+        owned = cache.owned_blocks(slot)
+        if keys is None:
+            keys = self.block_keys(tokens)
+        for j, key in enumerate(keys):
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key=key, page=int(owned[j]), parent=node)
+                node.children[key] = child
+                cache.retain(child.page)
+                added += 1
+            child.stamp = self._clock
+            node = child
+        return added
+
+    # -- eviction ----------------------------------------------------------
+
+    def _prunable_count(self, cache: PagedKVCache) -> int:
+        """Pages eviction could release right now: nodes whose page is
+        index-only (refcount 1) and whose entire subtree is likewise
+        prunable (a retained descendant pins every ancestor in place)."""
+
+        def walk(node: _Node) -> Tuple[int, bool]:
+            count, all_ok = 0, True
+            for c in node.children.values():
+                ccount, cok = walk(c)
+                count += ccount
+                all_ok = all_ok and cok
+            if node is self.root:
+                return count, all_ok
+            ok = all_ok and cache.refcount(node.page) == 1
+            return count + int(ok), ok
+
+        return walk(self.root)[0]
+
+    def evict(self, cache: PagedKVCache, n_pages: int) -> int:
+        """Release `n_pages` index-only pages (refcount 1 — no slot is
+        using them), leaf-first and oldest-stamp-first, or NOTHING when
+        fewer than `n_pages` are evictable — partially draining the index
+        would destroy hot prefixes without unblocking the caller's
+        admission. Returns the number of pages released (0 or n_pages).
+        Each trie scan drains every currently-evictable leaf (oldest
+        first) before rescanning — a rescan is only needed when deleting
+        leaves exposes their parents — so the walk is O(depth * index),
+        not O(n_pages * index)."""
+        if self._prunable_count(cache) < n_pages:
+            return 0
+        released = 0
+        while released < n_pages:
+            victims = sorted(
+                (n for n in self._leaves() if cache.refcount(n.page) == 1),
+                key=lambda n: n.stamp,
+            )
+            if not victims:
+                break
+            for victim in victims:
+                if released >= n_pages:
+                    break
+                del victim.parent.children[victim.key]
+                cache.release(victim.page)
+                released += 1
+        self.evicted_pages += released
+        return released
+
+    def _leaves(self) -> List[_Node]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            else:
+                out.append(node)
+        return out
+
+    def drop_all(self, cache: PagedKVCache) -> int:
+        """Release every index reference (teardown / tests)."""
+        n = 0
+        for page, cnt in self.page_refs().items():
+            for _ in range(cnt):
+                cache.release(page)
+                n += 1
+        self.root = _Node(key=None, page=-1, parent=None)
+        return n

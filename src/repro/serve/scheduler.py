@@ -16,7 +16,19 @@ Two cache modes:
   (DESIGN.md §8). Requests may have arbitrary distinct prompt lengths, a
   finished slot's pages are recycled through the free list, and a queued
   request is prefilled into a free slot at ANY tick without corrupting
-  its KV placement — the restriction documented above is gone.
+  its KV placement. Prefill writes straight into the page pools through
+  the jitted `prefill_paged` path — no dense cache allocation, no
+  device→host→device copy.
+
+  With `prefix=True` (paged only) a radix index over full KV pages
+  (DESIGN.md §9) dedups shared prompt prefixes: admission looks the
+  prompt up first, a hit maps the leading pages refcounted-shared into
+  the slot's table, prefill runs on the uncached suffix only, and the
+  completed pages are published back to the index for future requests.
+
+Admission scans the queue for the FIRST request the pool can admit
+(FIFO among admissible) instead of blocking on the queue head — a large
+request waiting for pages no longer starves small ones behind it.
 """
 
 from __future__ import annotations
@@ -27,10 +39,13 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ModelConfig
-from ..models import decode_step, decode_step_paged, init_cache, prefill
+from ..models import decode_step, init_cache, prefill
+from .compiled import jit_paged_decode, jit_paged_prefill
 from .paged_cache import PagedKVCache
+from .prefix_cache import PrefixIndex
 
 
 @dataclasses.dataclass
@@ -39,6 +54,11 @@ class Request:
     prompt: jnp.ndarray          # [T] int32
     max_new_tokens: int = 16
     generated: List[int] = dataclasses.field(default_factory=list)
+    #: memoized prefix-index block keys — a queued request is re-probed
+    #: every admission tick, but its prompt never changes
+    block_keys: Optional[List[Tuple[int, ...]]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def done(self) -> bool:
@@ -74,6 +94,7 @@ class ContinuousBatcher:
         paged: bool = False,
         block_size: int = 16,
         n_blocks: int = 0,
+        prefix: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -86,25 +107,23 @@ class ContinuousBatcher:
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.finished: Dict[int, List[int]] = {}
         self.ticks = 0
+        #: prompt tokens actually run through prefill compute (padded
+        #: suffix lengths — prefix hits shrink this, benchmarked)
+        self.prefill_tokens = 0
+        if prefix and not paged:
+            raise ValueError("prefix sharing requires paged=True")
+        self.prefix = PrefixIndex(block_size) if prefix else None
         if paged:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
                 n_blocks=n_blocks,
             )
             self.cache = None
-            self._decode_paged = jax.jit(
-                lambda p, t, kp, vp, bt, pos: decode_step_paged(
-                    p, t, kp, vp, bt, pos, cfg
-                )
-            )
-            # prompts are right-padded to a block-size multiple, so this
-            # retraces once per bucket (cache_len rides on the shape) and
-            # `last_pos` selects the true prompt end dynamically
-            self._prefill_paged = jax.jit(
-                lambda p, toks, lp: prefill(
-                    p, toks, cfg, cache_len=toks.shape[1], last_pos=lp
-                )
-            )
+            self._decode_paged = jit_paged_decode(cfg)
+            # suffixes are right-padded to a block-size multiple, so this
+            # retraces once per bucket and `last_pos` selects the true
+            # suffix end dynamically
+            self._prefill_paged = jit_paged_prefill(cfg)
         else:
             self.pcache = None
             self.cache = init_cache(cfg, n_slots, cache_len)
@@ -122,41 +141,122 @@ class ContinuousBatcher:
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
                 if self.paged:
-                    # admission control: reserve worst-case pages (prompt
-                    # + all decode writes) BEFORE dequeueing, so decode
-                    # growth can never exhaust the pool and an unadmitted
-                    # request stays queued until pages free up
-                    req = self.queue[0]
-                    total = int(req.prompt.shape[0]) + max(
-                        req.max_new_tokens - 1, 0
-                    )
-                    if not self.pcache.reserve_slot(i, total):
+                    admitted = self._admit_paged(i)
+                    if admitted is None:
+                        # nothing in the queue fits right now; later slots
+                        # see the same pool, so stop scanning this tick
                         break
-                    self.queue.popleft()
-                    self._prefill_into_paged(i, req)
+                    req, pages, n_cached = admitted
+                    self._prefill_into_paged(i, req, pages, n_cached)
                 else:
                     self._prefill_into_dense(i, self.queue.popleft())
+
+    # -- paged admission (reservation + prefix lookup) -----------------------
+
+    def _try_reserve(self, slot: int, req: Request):
+        """Reserve worst-case pages (prompt + all decode growth + COW)
+        for `req`, after a prefix-index lookup. Returns
+        (shared_pages, n_cached) on success, or the pool-draw deficit
+        (int > 0) when the pool cannot admit right now."""
+        pc = self.pcache
+        t = int(req.prompt.shape[0])
+        total = t + max(req.max_new_tokens - 1, 0)
+        pages: List[int] = []
+        n_cached, cow = 0, False
+        if self.prefix is not None:
+            if req.block_keys is None:
+                req.block_keys = self.prefix.block_keys(
+                    np.asarray(req.prompt)
+                )
+            pages = self.prefix.lookup(req.prompt, keys=req.block_keys)
+            n_cached, cow = self.prefix.split_prompt(req.prompt, pages)
+            pages = pages[: -(-n_cached // pc.block_size)] if n_cached else []
+        n_cow = int(cow and bool(pages))
+        if pc.reserve_slot(slot, total, n_shared=len(pages), n_cow=n_cow):
+            return pages, n_cached
+        draws = pc.draws_for(total, n_shared=len(pages), n_cow=n_cow)
+        return max(draws - pc.available_blocks(), 1)
+
+    def _admit_paged(self, slot: int):
+        """First admissible queued request (FIFO among admissible): the
+        admission check runs down the whole queue, so one large request
+        waiting for pages cannot head-of-line-block small ones behind it.
+        Cached index pages are only sacrificed as a last resort: a second
+        pass evicts exactly a request's missing draw count and retries,
+        and only runs when NOTHING was admissible without eviction."""
+        pc = self.pcache
+        deficits = []
+        for qi in range(len(self.queue)):
+            got = self._try_reserve(slot, self.queue[qi])
+            if not isinstance(got, int):
+                req = self.queue[qi]
+                del self.queue[qi]
+                return (req,) + got
+            deficits.append(got)
+        if self.prefix is None:
+            return None
+        for qi, deficit in enumerate(deficits):
+            if self.prefix.evict(pc, deficit):
+                # the eviction may have dropped matched pages (they carry
+                # the freshest stamps, so they go last) — redo lookup +
+                # reservation from scratch
+                got = self._try_reserve(slot, self.queue[qi])
+                if not isinstance(got, int):
+                    req = self.queue[qi]
+                    del self.queue[qi]
+                    return (req,) + got
+        return None
 
     def _prefill_into_dense(self, i: int, req: Request):
         logits, c1 = self._prefill_dense(self.params, req.prompt[None, :])
         self.cache = _insert_batch(self.cache, c1, i)
+        self.prefill_tokens += int(req.prompt.shape[0])
         self._start_slot(i, req, logits)
 
-    def _prefill_into_paged(self, i: int, req: Request):
+    def _prefill_into_paged(
+        self, i: int, req: Request, pages: List[int], n_cached: int
+    ):
+        """Suffix-only prefill: attach the prefix-hit pages refcounted,
+        COW/grow for the suffix window, run the jitted paged prefill on
+        the uncached tokens, then publish the completed full-page blocks
+        back to the index."""
+        pc = self.pcache
         t = int(req.prompt.shape[0])
-        bs = self.pcache.block_size
-        pad = -(-t // bs) * bs
-        toks = jnp.pad(req.prompt, (0, pad - t))[None, :]
-        logits, c1 = self._prefill_paged(
-            self.params, toks, jnp.asarray(t - 1, jnp.int32)
+        bs = pc.block_size
+        if pages:
+            pc.attach_shared(i, pages)
+        ns = t - n_cached
+        pad = -(-ns // bs) * bs
+        # host-side page prep BEFORE the device table snapshot: capacity
+        # for the full prompt, COW of any shared page the scatter touches
+        pc.begin_append(i, n_cached, ns)
+        toks = jnp.pad(req.prompt[n_cached:], (0, pad - ns))[None, :]
+        logits, pc.k_pages, pc.v_pages = self._prefill_paged(
+            self.params, toks, pc.k_pages, pc.v_pages,
+            pc.device_block_table()[i: i + 1],
+            jnp.asarray([n_cached], jnp.int32), jnp.asarray([t], jnp.int32),
+            jnp.asarray(ns - 1, jnp.int32),
         )
-        self.pcache.alloc_slot(i, t)
-        self.pcache.write_prefill(i, c1["k"][:, 0], c1["v"][:, 0], t)
+        pc.lengths[i] = t
+        self.prefill_tokens += pad
+        if self.prefix is not None:
+            self.prefix.lookups += 1
+            self.prefix.hits += bool(n_cached)
+            self.prefix.cached_tokens_served += n_cached
+            self.prefix.publish(req.prompt, pc, i, keys=req.block_keys)
         self._start_slot(i, req, logits)
 
     def _start_slot(self, i: int, req: Request, logits):
         nxt = int(jnp.argmax(logits[0, -1]))
         req.generated.append(nxt)
+        if req.done:
+            # max_new_tokens == 1: the prefill token completes the
+            # request — entering decode would emit an extra token (and
+            # write KV past the slot's reservation)
+            self.finished[req.uid] = req.generated
+            if self.paged:
+                self.pcache.free_slot(i)
+            return
         self.tokens = self.tokens.at[i, 0].set(nxt)
         self.slots[i] = req
 
@@ -188,19 +288,39 @@ class ContinuousBatcher:
 
     def _step_paged(self, active: List[int]) -> jnp.ndarray:
         pc = self.pcache
-        for i in active:  # page for the incoming token must exist pre-jit
-            pc.ensure_capacity(i, int(pc.lengths[i]) + 1)
+        for i in active:  # page for the incoming token must exist (and be
+            # exclusively owned — COW) before the jitted scatter
+            pc.begin_append(i, int(pc.lengths[i]), 1)
         logits, pc.k_pages, pc.v_pages = self._decode_paged(
             self.params, self.tokens, pc.k_pages, pc.v_pages,
             pc.device_block_table(), pc.device_positions(),
         )
         for i in active:
-            pc.append_position(i)
+            pc.lengths[i] += 1
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+    def run_until_drained(
+        self, max_ticks: int = 10_000, strict: bool = True
+    ) -> Dict[int, List[int]]:
+        """Drain the queue. If `max_ticks` is exhausted with work still
+        pending, raise RuntimeError (strict=True, default) or warn —
+        never silently return partial results; completed requests stay
+        available in `self.finished` either way."""
         ticks = 0
         while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
             self.step()
             ticks += 1
+        pending = len(self.queue) + sum(s is not None for s in self.slots)
+        if pending:
+            msg = (
+                f"run_until_drained: exhausted max_ticks={max_ticks} with "
+                f"{len(self.queue)} queued and "
+                f"{sum(s is not None for s in self.slots)} active requests "
+                f"({len(self.finished)} finished)"
+            )
+            if strict:
+                raise RuntimeError(msg)
+            import warnings
+
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return self.finished

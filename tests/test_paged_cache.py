@@ -1,5 +1,9 @@
 """Paged KV-cache subsystem: pool invariants, kernel/oracle parity, and
-paged-vs-dense decode equivalence on ragged continuous batches."""
+paged-vs-dense decode equivalence on ragged continuous batches.
+
+check_invariants is refcount-aware since DESIGN.md §9: exclusively
+owned pages are the refcount-1 special case (shared pages and the
+prefix index are covered in tests/test_prefix_cache.py)."""
 
 import dataclasses
 
@@ -69,6 +73,9 @@ def test_alloc_free_recycle_invariants(model):
     pc.alloc_slot(2, 12)
     pc.check_invariants()
     assert set(blocks0) & set(pc.owned_blocks(2))
+    # exclusively owned pages carry refcount exactly 1
+    assert all(pc.refcount(b) == 1 for b in pc.owned_blocks(2))
+    assert not any(pc.is_shared(b) for b in pc.owned_blocks(2))
 
 
 def test_block_table_append_across_boundaries(model):
