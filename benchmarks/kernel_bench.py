@@ -1,13 +1,19 @@
-"""Kernel micro-benchmarks: bit-plane GEMV vs dense matmul.
+"""Kernel micro-benchmarks: bit-plane GEMV vs dense matmul, plus the
+paged-attention gather.
 
 Wall time on this CPU host is NOT the TPU story (interpret-mode Pallas is
 a correctness tool); the `derived` column carries the quantity that
 matters on the target: HBM bytes moved per GEMV and the bandwidth
-amplification over bf16 (the paper's '100% useful bandwidth' objective).
+amplification over bf16 (the paper's '100% useful bandwidth' objective),
+and — for the paged kernels — the bytes the block walk actually streams
+per call vs what the old whole-pool BlockSpec would have copied into
+VMEM (the data-movement win of the scalar-prefetch rewrite, DESIGN §10).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import List, Tuple
 
@@ -77,6 +83,67 @@ def kernel_bench() -> List[Row]:
     return rows
 
 
+def paged_attention_bench() -> List[Row]:
+    """Paged decode + prefill kernels (DESIGN.md §10): interpret-mode
+    parity error vs the jnp oracles, and the per-call KV bytes the
+    scalar-prefetch block walk streams (max_blocks pages per slot)
+    against the whole-pool copy the pre-rewrite BlockSpec forced into
+    every grid step. Writes ``results/paged_kernel_bench.json``."""
+    from repro.kernels import ref
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.kernels.paged_prefill import paged_prefill_attention
+
+    rng = np.random.default_rng(0)
+    B, T, H, KV, hd, bs, nb, mb = 4, 8, 8, 2, 16, 8, 32, 4
+    itemsize = 2  # bf16 pools on the target
+    q1 = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    qt = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bs, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, KV, hd)), jnp.float32)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[: B * mb].reshape(B, mb), jnp.int32
+    )
+    lengths = jnp.asarray([mb * bs, 13, 1, 0], jnp.int32)
+    start = jnp.asarray([0, 8, 0, 8], jnp.int32)
+    total = jnp.asarray([mb * bs, 13, 5, 9], jnp.int32)
+    win = jnp.asarray(mb * bs, jnp.int32)
+
+    page_bytes = bs * KV * hd * itemsize
+    walk_bytes = 2 * mb * page_bytes            # K+V pages per slot
+    pool_bytes = 2 * nb * page_bytes            # old whole-pool copy
+    report = {
+        "shape": {"slots": B, "suffix_t": T, "heads": H, "kv_heads": KV,
+                  "head_dim": hd, "block_size": bs, "pool_blocks": nb,
+                  "max_blocks_per_slot": mb},
+        "kv_bytes_streamed_per_slot": walk_bytes,
+        "kv_bytes_whole_pool_per_slot": pool_bytes,
+        "gather_reduction": round(1.0 - walk_bytes / pool_bytes, 3),
+    }
+    rows: List[Row] = []
+    for name, fn, oracle, args in (
+        ("decode", paged_decode_attention, ref.paged_attention_ref,
+         (q1, kp, vp, bt, lengths, win)),
+        ("prefill", paged_prefill_attention, ref.paged_prefill_ref,
+         (qt, kp, vp, bt, start, total, win)),
+    ):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args, interpret=True))
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(out - oracle(*args))))
+        assert err < 2e-5, (name, err)
+        report[name] = {"interpret_us": round(us, 1), "max_abs_err": err}
+        rows.append((
+            f"kernel/paged_{name}_b{B}", us,
+            f"max_abs_err={err:.2e};walk_bytes={walk_bytes};"
+            f"whole_pool_bytes={pool_bytes};"
+            f"gather_reduction={report['gather_reduction']:.0%}",
+        ))
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "paged_kernel_bench.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    return rows
+
+
 def reduction_schedule_bench() -> List[Row]:
     """Collective-bytes napkin model per schedule (validated in dist tests)."""
     from repro.core.reduction import collective_bytes_per_device
@@ -93,3 +160,19 @@ def reduction_schedule_bench() -> List[Row]:
                 f"bytes_per_dev={b/1e6:.0f}MB;vs_tree={b / collective_bytes_per_device('tree', shard_mb, p):.2f}x",
             ))
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run just the paged-attention case (CI smoke)")
+    args = ap.parse_args()
+    sections = [paged_attention_bench] if args.paged_only else [
+        kernel_bench, paged_attention_bench, reduction_schedule_bench,
+    ]
+    print("name,us_per_call,derived")
+    for fn in sections:
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")

@@ -10,7 +10,8 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig7/*      Fig. 7     GEMV cycle latency + execution time
   fig7sim/*   Fig. 7     cycle-accurate simulator validation
   table9/*    Table IX   curve-fitted (a, b, c) + interpretations
-  kernel/*    TPU adaptation: bit-plane GEMV bandwidth amplification
+  kernel/*    TPU adaptation: bit-plane GEMV bandwidth amplification,
+              paged-attention gather parity + streamed-bytes accounting
   reduction/* collective schedule byte models
   roofline/*  per-cell roofline terms from the dry-run artifacts
   serve/*     continuous-batching throughput, dense vs paged KV cache
@@ -23,7 +24,11 @@ import sys
 
 
 def main() -> None:
-    from .kernel_bench import kernel_bench, reduction_schedule_bench
+    from .kernel_bench import (
+        kernel_bench,
+        paged_attention_bench,
+        reduction_schedule_bench,
+    )
     from .paper_tables import (
         fig1_scaling,
         fig5_scalability,
@@ -43,7 +48,8 @@ def main() -> None:
         table1_frequency, fig1_scaling, table4_reduction, table5_utilization,
         fig5_scalability, table8_systems, fig7_gemv,
         fig7_simulator_validation, table9_curvefit, kernel_bench,
-        reduction_schedule_bench, roofline_bench, serve_bench, prefix_bench,
+        paged_attention_bench, reduction_schedule_bench, roofline_bench,
+        serve_bench, prefix_bench,
     ]
     print("name,us_per_call,derived")
     failures = 0

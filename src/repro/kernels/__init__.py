@@ -3,10 +3,13 @@
 bitplane_gemv     decode-shape bit-plane kernel (B untiled)
 bitplane_gemm     prefill/training-shape bit-plane kernel (B tiled)
 pack              digit-plane packing kernel
-paged_attention   paged-decode attention (block-table KV gather)
-paged_prefill     paged-prefill attention (suffix queries, offset causal)
-ops               public jit'd wrappers (dispatch + epilogue)
-ref               pure-jnp oracles
+paged_attention   paged-decode attention: scalar-prefetch block walk,
+                  double-buffered page DMA from ANY/HBM pools
+paged_prefill     paged-prefill attention (suffix queries, offset causal
+                  mask), same native data-movement path
+ops               public jit'd wrappers (impl dispatch + epilogue);
+                  `ops.resolve_impl` is the single strict/silent rule
+ref               pure-jnp oracles (the interpret-mode parity anchors)
 """
 
 from .bitplane_gemm import bitplane_gemm

@@ -29,6 +29,38 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_impl(impl: str) -> Literal["ref", "interpret", "native"]:
+    """Single home of the impl-dispatch rule, shared by the bit-plane ops
+    and the paged-attention kernels.
+
+    `auto` is the silent-dispatch path: the jnp oracle off-TPU (dry-run
+    lowering), the native kernel on TPU. Explicit values are **strict**:
+    `pallas` raises off-TPU instead of silently running the interpreter
+    (a benchmark that asks for the native kernel must never measure the
+    interpreter), `pallas_interpret` always runs the kernel body through
+    the interpreter, `ref` always runs the oracle.
+    """
+    if impl == "ref":
+        return "ref"
+    if impl == "auto":
+        return "native" if _on_tpu() else "ref"
+    if impl == "pallas_interpret":
+        return "interpret"
+    if impl == "pallas":
+        if not _on_tpu():
+            raise RuntimeError(
+                "impl='pallas' requests the native TPU kernel but the "
+                f"default backend is '{jax.default_backend()}'; use "
+                "impl='pallas_interpret' to run the kernel body on CPU or "
+                "impl='auto' for silent backend dispatch"
+            )
+        return "native"
+    raise ValueError(
+        f"unknown impl {impl!r}; expected one of "
+        "'auto', 'pallas', 'pallas_interpret', 'ref'"
+    )
+
+
 def quantize_and_pack(
     w: jnp.ndarray, n_bits: int, group: int = 1, impl: Impl = "auto"
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -38,11 +70,12 @@ def quantize_and_pack(
     dpb = 8 // group
     k, m = u.shape
     u_r = u.reshape(k // dpb, dpb, m).transpose(1, 0, 2)  # [dpb, K8, M]
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    mode = resolve_impl(impl)
+    if mode == "ref":
         planes = ref.pack_ref(w_q, n_bits, group)
     else:
         planes = pack_bitplanes(
-            u_r, n_bits=n_bits, group=group, interpret=(impl == "pallas_interpret")
+            u_r, n_bits=n_bits, group=group, interpret=(mode == "interpret")
         )
     return planes, scale
 
@@ -65,11 +98,12 @@ def bitplane_matmul(
     b = xf.shape[0]
     m = planes.shape[-1]
 
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    mode = resolve_impl(impl)
+    if mode == "ref":
         y = ref.bitplane_matmul_ref(xf, planes, scale, n_bits, group)
         return y.reshape(*lead, m)
 
-    interpret = impl == "pallas_interpret" or not _on_tpu()
+    interpret = mode == "interpret"
     x_r = ref.prepare_x_ref(xf, group)
     kern = bitplane_gemv if b <= _GEMV_MAX_B else bitplane_gemm
     raw = kern(

@@ -1,26 +1,36 @@
-"""Pallas paged-decode attention: block-table KV gather + online softmax.
+"""Pallas paged-decode attention: native-TPU block-table gather.
 
-The serving-side companion of the bit-plane GEMV (DESIGN.md §8): decode
-attention where each slot's KV lives in non-contiguous fixed-size pages of
-a shared pool, addressed through a per-slot block table. One grid program
-per slot walks its table, gathers pages with dynamic loads, and folds them
-into a running (m, l, acc) online softmax over the slot's ragged length —
-so a batch of requests with completely different prompt lengths decodes in
-one fused call, no padding to a common length.
+The serving-side companion of the bit-plane GEMV (DESIGN.md §8, §10):
+decode attention where each slot's KV lives in non-contiguous fixed-size
+pages of a shared pool, addressed through a per-slot block table — so a
+batch of requests with completely different prompt lengths decodes in one
+fused call, no padding to a common length.
+
+The data-movement path is the one real hardware executes ("the BRAM is
+the limit" applied to TPU serving): the KV pools stay in ANY/HBM memory
+space and are never mapped whole into a grid step. Instead the block
+table, lengths and window ride in as **scalar-prefetch operands**
+(`PrefetchScalarGridSpec`), the grid is (slot, kv-block), and each step
+DMAs exactly one page per pool into a double-buffered VMEM scratch slot —
+the copy for step s+1 is issued before step s's fold, so on TPU the page
+walk overlaps compute and runs at HBM stream speed. The online-softmax
+state (m, l, acc) is carried across a slot's kv-block steps in VMEM
+scratch; the last step normalizes and writes the slot's output block.
 
 Layouts:
     q            [B, H, hd]                 one query token per slot
-    k/v_pages    [n_blocks, bs, KV, hd]     the shared page pool
+    k/v_pages    [n_blocks, bs, KV, hd]     the shared page pool (ANY/HBM)
     block_table  [B, max_blocks] int32      page id of slot b's j-th page
     lengths      [B] int32                  valid kv count (ragged)
     window       [1] int32                  sliding window (cache capacity
                                             = full attention)
 
-Like the bit-plane kernels this runs interpret-mode on CPU as the
-correctness tool (kernels/ref.paged_attention_ref is the oracle). On a
-real TPU the page gather becomes scalar-prefetch + ANY-memory-space DMA
-(PrefetchScalarGridSpec); the block walk and online-softmax math are
-identical, which is exactly what the parity tests pin down.
+Every (slot, kv-block) step folds with the same masked math as the
+`ref.paged_attention_ref` oracle — including steps past a slot's length,
+whose contributions cancel through the online-softmax rescale — so
+interpret mode on CPU is bit-comparable to the oracle across ragged
+lengths, windows, and COW-fragmented tables (the parity tests), and the
+identical body lowers natively on TPU.
 """
 
 from __future__ import annotations
@@ -30,51 +40,77 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from . import ref
-
-NEG_INF = -1e30
+from .ops import resolve_impl
+from .paged_common import (
+    NEG_INF,
+    double_buffered_page_walk,
+    finalize_online_softmax,
+    online_softmax_fold,
+    reset_online_softmax,
+)
 
 
 def _paged_decode_kernel(
-    q_ref,        # [1, H, hd]
-    kp_ref,       # [n_blocks, bs, KV, hd] — whole pool visible
-    vp_ref,
-    bt_ref,       # [1, max_blocks] int32
-    len_ref,      # [1] int32
+    # scalar prefetch (SMEM)
+    bt_ref,       # [B, max_blocks] int32
+    len_ref,      # [B] int32
     win_ref,      # [1] int32
-    out_ref,      # [1, H, hd] f32
+    # blocked / ANY operands
+    q_ref,        # [1, H, hd] VMEM block of slot i
+    kp_hbm,       # [n_blocks, bs, KV, hd] — ANY/HBM, never blocked in
+    vp_hbm,
+    out_ref,      # [1, H, hd] f32 VMEM block of slot i
+    # scratch
+    k_buf,        # [2, bs, KV, hd] double-buffered page landing zone
+    v_buf,
+    m_s,          # [KV, g] f32 — online-softmax running max
+    l_s,          # [KV, g] f32 — running normalizer
+    acc_s,        # [KV, g, hd] f32 — running weighted values
+    sem,          # DMA semaphores [2 buffers, 2 pools]
     *,
     n_kv: int,
     block_size: int,
+    max_blocks: int,
 ):
+    i = pl.program_id(0)               # slot
+    j = pl.program_id(1)               # kv block within the slot's table
+    n_steps = pl.num_programs(0) * max_blocks
+    step = i * max_blocks + j
     h, hd = q_ref.shape[1], q_ref.shape[2]
     g = h // n_kv
-    max_blocks = bt_ref.shape[1]
-    length = len_ref[0]
+
+    # double-buffered DMA: warm up step 0, prefetch step+1, wait step
+    cur = double_buffered_page_walk(
+        step, n_steps, bt_ref, max_blocks, kp_hbm, vp_hbm, k_buf, v_buf, sem
+    )
+
+    # -- online-softmax fold (identical math to the ref oracle) -----------
+    @pl.when(j == 0)
+    def _():
+        reset_online_softmax(m_s, l_s, acc_s)
+
+    length = len_ref[i]
     window = win_ref[0]
     q_pos = length - 1
     qf = q_ref[0].reshape(n_kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    kj = k_buf[cur].astype(jnp.float32)                  # [bs, KV, hd]
+    vj = v_buf[cur].astype(jnp.float32)
 
-    m = jnp.full((n_kv, g), NEG_INF, jnp.float32)
-    l = jnp.zeros((n_kv, g), jnp.float32)
-    acc = jnp.zeros((n_kv, g, hd), jnp.float32)
-    for j in range(max_blocks):          # static walk; masking does raggedness
-        page = bt_ref[0, j]
-        kj = kp_ref[pl.ds(page, 1)][0].astype(jnp.float32)   # [bs, KV, hd]
-        vj = vp_ref[pl.ds(page, 1)][0].astype(jnp.float32)
-        scores = jnp.einsum("kgh,skh->kgs", qf, kj)          # [KV, g, bs]
-        kv_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
-        ok = (kv_pos < length) & (kv_pos > q_pos - window)
-        scores = jnp.where(ok[None, None, :], scores, NEG_INF)
-        m_new = jnp.maximum(m, scores.max(axis=-1))
-        p = jnp.exp(scores - m_new[..., None])
-        alpha = jnp.exp(m - m_new)
-        l = alpha * l + p.sum(axis=-1)
-        acc = alpha[..., None] * acc + jnp.einsum("kgs,skh->kgh", p, vj)
-        m = m_new
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    out_ref[0] = out.reshape(h, hd)
+    scores = jnp.einsum("kgh,skh->kgs", qf, kj)          # [KV, g, bs]
+    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1
+    )                                                    # [1, bs] (2D: TPU)
+    ok = (kv_pos < length) & (kv_pos > q_pos - window)
+    online_softmax_fold(
+        m_s, l_s, acc_s, scores, ok[None], vj, "kgs,skh->kgh"
+    )
+
+    @pl.when(j == max_blocks - 1)
+    def _():
+        out_ref[0] = finalize_online_softmax(l_s, acc_s).reshape(h, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -94,26 +130,36 @@ def paged_decode_attention(
     assert hd2 == hd, (hd2, hd)
     assert h % n_kv == 0, (h, n_kv)
     mb = block_table.shape[1]
+    g = h // n_kv
     win = jnp.asarray(window, jnp.int32).reshape(1)
     kernel = functools.partial(
-        _paged_decode_kernel, n_kv=n_kv, block_size=bs
+        _paged_decode_kernel, n_kv=n_kv, block_size=bs, max_blocks=mb
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,       # block_table, lengths, window
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i, j, *_: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # V pool stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda i, j, *_: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, bs, n_kv, hd), k_pages.dtype),
+            pltpu.VMEM((2, bs, n_kv, hd), v_pages.dtype),
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g, hd), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
     )
     return pl.pallas_call(
         kernel,
-        grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
-            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((1, mb), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, h, hd), lambda i: (i, 0, 0)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
         interpret=interpret,
-    )(q, k_pages, v_pages, block_table.astype(jnp.int32),
-      lengths.astype(jnp.int32), win)
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), win,
+      q, k_pages, v_pages)
 
 
 def paged_attention(
@@ -126,14 +172,16 @@ def paged_attention(
     *,
     impl: str = "auto",
 ) -> jnp.ndarray:
-    """Impl dispatch, mirroring kernels.ops: `auto` uses the jnp oracle on
-    CPU (dry-run lowering) and the Pallas kernel on TPU;
-    `pallas_interpret` forces the kernel body through the interpreter."""
-    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+    """Impl dispatch, sharing `ops.resolve_impl`: `auto` silently uses the
+    jnp oracle on CPU (dry-run lowering) and the native kernel on TPU;
+    explicit `pallas` is strict (raises off-TPU); `pallas_interpret`
+    forces the kernel body through the interpreter; `ref` is the oracle."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
         return ref.paged_attention_ref(
             q, k_pages, v_pages, block_table, lengths, window
         )
-    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
     return paged_decode_attention(
-        q, k_pages, v_pages, block_table, lengths, window, interpret=interpret
+        q, k_pages, v_pages, block_table, lengths, window,
+        interpret=(mode == "interpret"),
     )

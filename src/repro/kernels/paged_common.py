@@ -1,0 +1,98 @@
+"""Shared kernel pieces of the two paged-attention kernels.
+
+Both paged kernels (decode and prefill) walk a per-slot block table over
+a (slot, kv-block) grid, consume one K page + one V page per step from
+ANY/HBM-resident pools, and fold each page into a carried online
+softmax. The DMA pipeline and the fold math are identical in both —
+decode is simply the T=1 case of the fold — so both halves live here:
+a fix to the semaphore layout, the prefetch guard, or the softmax
+numerics (NEG_INF sentinel, alpha rescale, max(l, eps) epilogue) lands
+in exactly one place and cannot diverge between the kernels
+(DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def double_buffered_page_walk(
+    step,         # linear grid step: slot * max_blocks + kv_block
+    n_steps,      # total grid steps: n_slots * max_blocks
+    bt_ref,       # [B, max_blocks] int32 block table (scalar prefetch)
+    max_blocks: int,
+    kp_hbm,       # [n_blocks, bs, KV, hd] K pool — ANY/HBM ref
+    vp_hbm,       # V pool
+    k_buf,        # [2, bs, KV, hd] VMEM landing buffers
+    v_buf,
+    sem,          # DMA semaphores [2 buffers, 2 pools]
+):
+    """Run one grid step of the double-buffered block walk: start the
+    copies for step+1, wait for this step's pages, and return the buffer
+    index now holding them (read `k_buf[cur]` / `v_buf[cur]`)."""
+
+    def page_copies(s, slot):
+        """The two async page copies (K and V pools) of linear step `s`
+        into buffer `slot` — recreated identically to start and to wait."""
+        page = bt_ref[s // max_blocks, s % max_blocks]
+        return (
+            pltpu.make_async_copy(
+                kp_hbm.at[pl.ds(page, 1)], k_buf.at[pl.ds(slot, 1)],
+                sem.at[slot, 0],
+            ),
+            pltpu.make_async_copy(
+                vp_hbm.at[pl.ds(page, 1)], v_buf.at[pl.ds(slot, 1)],
+                sem.at[slot, 1],
+            ),
+        )
+
+    @pl.when(step == 0)
+    def _():
+        for c in page_copies(0, 0):
+            c.start()
+
+    @pl.when(step + 1 < n_steps)
+    def _():
+        for c in page_copies(step + 1, (step + 1) % 2):
+            c.start()
+
+    cur = jax.lax.rem(step, 2)
+    for c in page_copies(step, cur):
+        c.wait()
+    return cur
+
+
+def reset_online_softmax(m_s, l_s, acc_s):
+    """Start a slot's fold: -inf running max, zero normalizer/values."""
+    m_s[...] = jnp.full_like(m_s, NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s)
+    acc_s[...] = jnp.zeros_like(acc_s)
+
+
+def online_softmax_fold(m_s, l_s, acc_s, scores, ok, vj, v_spec: str):
+    """Fold one page of `scores` (last axis = page rows) into the carried
+    (m, l, acc) state. `ok` is the validity mask broadcast to `scores`;
+    masked rows score NEG_INF, and their unit contributions while the
+    running max is still NEG_INF cancel later through the alpha rescale
+    (the oracle computes don't-care rows the same way — parity).
+    `v_spec` contracts the probabilities with the page's values
+    (decode "kgs,skh->kgh", prefill "kgts,skh->kgth")."""
+    scores = jnp.where(ok, scores, NEG_INF)
+    m, l, acc = m_s[...], l_s[...], acc_s[...]
+    m_new = jnp.maximum(m, scores.max(axis=-1))
+    p = jnp.exp(scores - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    m_s[...] = m_new
+    l_s[...] = alpha * l + p.sum(axis=-1)
+    acc_s[...] = alpha[..., None] * acc + jnp.einsum(v_spec, p, vj)
+
+
+def finalize_online_softmax(l_s, acc_s):
+    """Normalize the carried state; max(l, eps) keeps fully-masked rows
+    finite (matching the oracles' don't-care semantics)."""
+    return acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]

@@ -1,13 +1,13 @@
-"""Pallas paged-prefill attention: suffix queries over block-table KV.
+"""Pallas paged-prefill attention: native-TPU suffix queries over
+block-table KV.
 
-The compute half of prefix sharing (DESIGN.md §9). When a request's
+The compute half of prefix sharing (DESIGN.md §9, §10). When a request's
 leading tokens hit the prefix index, only the *uncached suffix* runs
 through prefill — but its queries must still attend to the cached-prefix
-pages. This kernel does exactly that: one grid program per slot walks
-the slot's block table, gathers each page with a dynamic load, and folds
-it into an online softmax for **all suffix queries at once**, with an
-offset causal mask — suffix row `t` sits at logical position
-`start + t`, so page row `kv_pos` participates iff
+pages. This kernel folds every table page into an online softmax for
+**all suffix queries at once**, with an offset causal mask — suffix row
+`t` sits at logical position `start + t`, so page row `kv_pos`
+participates iff
 
     kv_pos <= start + t          (causality, offset by the cached prefix)
     kv_pos <  total              (ragged: suffix padding rows are garbage)
@@ -17,23 +17,30 @@ A cache hit therefore skips the prefix's prefill compute entirely — the
 prefix contributes only page reads — while a miss (start = 0) degenerates
 to ordinary causal paged prefill over the whole prompt.
 
+Like the paged-decode kernel (see its module docstring for the full
+data-movement story) this is a native-lowerable scalar-prefetch kernel:
+block table / start / total / window ride in via
+`PrefetchScalarGridSpec`, the KV pools stay in ANY/HBM memory space, the
+grid is (slot, kv-block), and each step double-buffer-DMAs one page per
+pool into VMEM scratch ahead of the fold. The per-query online-softmax
+state (m, l, acc) is carried in VMEM scratch across a slot's kv-block
+steps; the last step normalizes and writes the slot's [T, H, hd] output.
+
 Layouts:
     q            [B, T, H, hd]              suffix queries, T padded to a
                                             block multiple (RoPE applied
                                             at start + t by the caller)
-    k/v_pages    [n_blocks, bs, KV, hd]     shared pool, suffix KV already
-                                            scattered by the caller
+    k/v_pages    [n_blocks, bs, KV, hd]     shared pool (ANY/HBM), suffix
+                                            KV already scattered in
     block_table  [B, max_blocks] int32      page id of slot b's j-th page
     start        [B] int32                  cached-prefix length per slot
     total        [B] int32                  full valid length per slot
     window       [1] int32                  sliding window (cache capacity
                                             = full attention)
 
-Like the paged-decode kernel this runs interpret-mode on CPU as the
-correctness tool (kernels/ref.paged_prefill_ref is the oracle). On a
-real TPU the page gather becomes scalar-prefetch + ANY-memory-space DMA
-(PrefetchScalarGridSpec); the block walk and the online-softmax math are
-identical, which is what the parity tests pin down.
+Every step folds with the same masked math as `ref.paged_prefill_ref`,
+so interpret mode on CPU is bit-comparable to the oracle (parity tests)
+and the identical body lowers natively on TPU.
 """
 
 from __future__ import annotations
@@ -43,59 +50,86 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from . import ref
-
-NEG_INF = -1e30
+from .ops import resolve_impl
+from .paged_common import (
+    NEG_INF,
+    double_buffered_page_walk,
+    finalize_online_softmax,
+    online_softmax_fold,
+    reset_online_softmax,
+)
 
 
 def _paged_prefill_kernel(
-    q_ref,        # [1, T, H, hd]
-    kp_ref,       # [n_blocks, bs, KV, hd] — whole pool visible
-    vp_ref,
-    bt_ref,       # [1, max_blocks] int32
-    start_ref,    # [1] int32
-    total_ref,    # [1] int32
+    # scalar prefetch (SMEM)
+    bt_ref,       # [B, max_blocks] int32
+    start_ref,    # [B] int32
+    total_ref,    # [B] int32
     win_ref,      # [1] int32
-    out_ref,      # [1, T, H, hd] f32
+    # blocked / ANY operands
+    q_ref,        # [1, T, H, hd] VMEM block of slot i
+    kp_hbm,       # [n_blocks, bs, KV, hd] — ANY/HBM, never blocked in
+    vp_hbm,
+    out_ref,      # [1, T, H, hd] f32 VMEM block of slot i
+    # scratch
+    k_buf,        # [2, bs, KV, hd] double-buffered page landing zone
+    v_buf,
+    m_s,          # [KV, g, T] f32
+    l_s,          # [KV, g, T] f32
+    acc_s,        # [KV, g, T, hd] f32
+    sem,          # DMA semaphores [2 buffers, 2 pools]
     *,
     n_kv: int,
     block_size: int,
+    max_blocks: int,
 ):
+    i = pl.program_id(0)               # slot
+    j = pl.program_id(1)               # kv block within the slot's table
+    n_steps = pl.num_programs(0) * max_blocks
+    step = i * max_blocks + j
     t, h, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
     g = h // n_kv
-    max_blocks = bt_ref.shape[1]
-    start = start_ref[0]
-    total = total_ref[0]
+
+    # double-buffered DMA: warm up step 0, prefetch step+1, wait step
+    cur = double_buffered_page_walk(
+        step, n_steps, bt_ref, max_blocks, kp_hbm, vp_hbm, k_buf, v_buf, sem
+    )
+
+    # -- online-softmax fold (identical math to the ref oracle) -----------
+    @pl.when(j == 0)
+    def _():
+        reset_online_softmax(m_s, l_s, acc_s)
+
+    start = start_ref[i]
+    total = total_ref[i]
     window = win_ref[0]
-    q_pos = start + jax.lax.iota(jnp.int32, t)               # [T]
+    q_pos = start + jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)  # [T, 1]
     qf = (
         q_ref[0].reshape(t, n_kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
     )
+    kj = k_buf[cur].astype(jnp.float32)                  # [bs, KV, hd]
+    vj = v_buf[cur].astype(jnp.float32)
 
-    m = jnp.full((n_kv, g, t), NEG_INF, jnp.float32)
-    l = jnp.zeros((n_kv, g, t), jnp.float32)
-    acc = jnp.zeros((n_kv, g, t, hd), jnp.float32)
-    for j in range(max_blocks):          # static walk; masking does raggedness
-        page = bt_ref[0, j]
-        kj = kp_ref[pl.ds(page, 1)][0].astype(jnp.float32)   # [bs, KV, hd]
-        vj = vp_ref[pl.ds(page, 1)][0].astype(jnp.float32)
-        scores = jnp.einsum("tkgh,skh->kgts", qf, kj)        # [KV, g, T, bs]
-        kv_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
-        ok = (
-            (kv_pos[None, :] <= q_pos[:, None])
-            & (kv_pos[None, :] < total)
-            & (kv_pos[None, :] > q_pos[:, None] - window)
-        )                                                    # [T, bs]
-        scores = jnp.where(ok[None, None], scores, NEG_INF)
-        m_new = jnp.maximum(m, scores.max(axis=-1))
-        p = jnp.exp(scores - m_new[..., None])
-        alpha = jnp.exp(m - m_new)
-        l = alpha * l + p.sum(axis=-1)
-        acc = alpha[..., None] * acc + jnp.einsum("kgts,skh->kgth", p, vj)
-        m = m_new
-    out = acc / jnp.maximum(l, 1e-30)[..., None]             # [KV, g, T, hd]
-    out_ref[0] = out.transpose(2, 0, 1, 3).reshape(t, h, hd)
+    scores = jnp.einsum("tkgh,skh->kgts", qf, kj)        # [KV, g, T, bs]
+    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1
+    )                                                    # [1, bs] (2D: TPU)
+    ok = (
+        (kv_pos <= q_pos)
+        & (kv_pos < total)
+        & (kv_pos > q_pos - window)
+    )                                                    # [T, bs]
+    online_softmax_fold(
+        m_s, l_s, acc_s, scores, ok[None, None], vj, "kgts,skh->kgth"
+    )
+
+    @pl.when(j == max_blocks - 1)
+    def _():
+        out = finalize_online_softmax(l_s, acc_s)        # [KV, g, T, hd]
+        out_ref[0] = out.transpose(2, 0, 1, 3).reshape(t, h, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -116,27 +150,36 @@ def paged_prefill_attention(
     assert hd2 == hd, (hd2, hd)
     assert h % n_kv == 0, (h, n_kv)
     mb = block_table.shape[1]
+    g = h // n_kv
     win = jnp.asarray(window, jnp.int32).reshape(1)
     kernel = functools.partial(
-        _paged_prefill_kernel, n_kv=n_kv, block_size=bs
+        _paged_prefill_kernel, n_kv=n_kv, block_size=bs, max_blocks=mb
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,       # block_table, start, total, window
+        grid=(b, mb),
+        in_specs=[
+            pl.BlockSpec((1, t, h, hd), lambda i, j, *_: (i, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # V pool stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, t, h, hd), lambda i, j, *_: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, bs, n_kv, hd), k_pages.dtype),
+            pltpu.VMEM((2, bs, n_kv, hd), v_pages.dtype),
+            pltpu.VMEM((n_kv, g, t), jnp.float32),
+            pltpu.VMEM((n_kv, g, t), jnp.float32),
+            pltpu.VMEM((n_kv, g, t, hd), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
     )
     return pl.pallas_call(
         kernel,
-        grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, t, h, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((n_blocks, bs, n_kv, hd), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((1, mb), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((1, t, h, hd), lambda i: (i, 0, 0, 0)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
         interpret=interpret,
-    )(q, k_pages, v_pages, block_table.astype(jnp.int32),
-      jnp.asarray(start, jnp.int32), jnp.asarray(total, jnp.int32), win)
+    )(block_table.astype(jnp.int32), jnp.asarray(start, jnp.int32),
+      jnp.asarray(total, jnp.int32), win, q, k_pages, v_pages)
 
 
 def paged_prefill(
@@ -150,15 +193,16 @@ def paged_prefill(
     *,
     impl: str = "auto",
 ) -> jnp.ndarray:
-    """Impl dispatch, mirroring kernels.ops: `auto` uses the jnp oracle on
-    CPU (dry-run lowering) and the Pallas kernel on TPU;
-    `pallas_interpret` forces the kernel body through the interpreter."""
-    if impl == "ref" or (impl == "auto" and jax.default_backend() != "tpu"):
+    """Impl dispatch, sharing `ops.resolve_impl`: `auto` silently uses the
+    jnp oracle on CPU (dry-run lowering) and the native kernel on TPU;
+    explicit `pallas` is strict (raises off-TPU); `pallas_interpret`
+    forces the kernel body through the interpreter; `ref` is the oracle."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
         return ref.paged_prefill_ref(
             q, k_pages, v_pages, block_table, start, total, window
         )
-    interpret = impl == "pallas_interpret" or jax.default_backend() != "tpu"
     return paged_prefill_attention(
         q, k_pages, v_pages, block_table, start, total, window,
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )

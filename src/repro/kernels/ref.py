@@ -135,7 +135,14 @@ def dequantize_ref(planes, scale, n_bits: int, group: int = 1) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# paged decode attention (DESIGN.md §8)
+# paged attention (DESIGN.md §8-§10)
+#
+# These two oracles are the parity anchors for the native scalar-prefetch
+# Pallas kernels (paged_attention.py / paged_prefill.py): the kernels fold
+# every block-table page with exactly this masked math, so interpret mode
+# must match to fp32 tolerance for ALL rows — including don't-care outputs
+# (length-0 slots, padded suffix rows), which both paths intentionally
+# compute the same way (`acc / max(l, eps)` over fully-masked scores).
 # ---------------------------------------------------------------------------
 
 NEG_INF = -1e30

@@ -51,6 +51,13 @@ def main():
     ap.add_argument("--shared-prefix-len", type=int, default=32,
                     help="tokens of common system prompt prepended to "
                          "every request (--prefix demo trace)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="EOS token id: a slot emitting it stops early and "
+                         "frees its pages that tick (-1 = never)")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "pallas", "pallas_interpret", "ref"],
+                    help="paged-attention kernel path; explicit values are "
+                         "strict ('pallas' raises off-TPU)")
     args = ap.parse_args()
     if args.prefix and not args.paged:
         ap.error("--prefix requires --paged (the prefix index shares "
@@ -72,6 +79,7 @@ def main():
         cfg, params, n_slots=args.slots, cache_len=cache_len,
         prompt_len=None if args.paged else args.prompt_len,
         paged=args.paged, block_size=args.block_size, prefix=args.prefix,
+        eos_token=args.eos, kernel_impl=args.kernel_impl,
     )
     key = jax.random.PRNGKey(1)
     shared = jax.random.randint(

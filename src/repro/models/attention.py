@@ -289,6 +289,9 @@ def attention_decode_paged(
     `block_table[b, positions[b] // bs]` at offset `positions[b] % bs`,
     and attention runs over the slot's ragged length — so slots refilled
     mid-run with different prompt lengths coexist in one decode batch.
+    `impl` follows `kernels.ops.resolve_impl`: `auto` silently dispatches
+    (oracle off-TPU, native scalar-prefetch kernel on TPU); explicit
+    values are strict.
     """
     b = x.shape[0]
     bs = k_pages.shape[1]
@@ -333,7 +336,8 @@ def attention_prefill_paged(
     with the offset causal mask. Padding rows (start + t >= total) write
     garbage KV beyond the slot's length (masked everywhere, overwritten
     by later decode scatters) or into the scratch page when they fall
-    past the slot's allocated blocks.
+    past the slot's allocated blocks. `impl` follows
+    `kernels.ops.resolve_impl` (strict explicit values, silent `auto`).
     """
     b, t, _ = x.shape
     bs = k_pages.shape[1]

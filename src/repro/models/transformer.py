@@ -607,10 +607,12 @@ def decode_step_paged(
     block_table: jnp.ndarray,  # [B, max_blocks] int32 (shared across layers)
     positions: jnp.ndarray,    # [B] int32 — per-slot index of the new token
     cfg: ModelConfig,
+    impl: str = "auto",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One decode step against the block-paged cache: per-slot positions
     instead of the dense cache's single global write offset, so every slot
-    may sit at a different sequence length."""
+    may sit at a different sequence length. `impl` selects the paged
+    attention kernel path (ops.resolve_impl semantics)."""
     if cfg.block_kind != "attn":
         raise ValueError("decode_step_paged supports attention stacks only")
     dt = compute_dtype(cfg.dtype)
@@ -622,7 +624,7 @@ def decode_step_paged(
         lp, w, kp, vp = xs
         h, kp, vp = attention_decode_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
-            kp, vp, block_table, window=w, **_attn_kwargs(cfg),
+            kp, vp, block_table, window=w, impl=impl, **_attn_kwargs(cfg),
         )
         xc = xc + h
         hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
@@ -652,6 +654,7 @@ def prefill_paged(
     total: jnp.ndarray,        # [B] int32 — full valid length per slot
     cfg: ModelConfig,
     last_pos: Optional[jnp.ndarray] = None,
+    impl: str = "auto",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Prefill only the uncached suffix directly into the paged pools
     (DESIGN.md §9): the suffix KV scatters through the block table
@@ -675,7 +678,7 @@ def prefill_paged(
         lp, w, kp, vp = xs
         h, kp, vp = attention_prefill_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), start, total,
-            kp, vp, block_table, window=w, **_attn_kwargs(cfg),
+            kp, vp, block_table, window=w, impl=impl, **_attn_kwargs(cfg),
         )
         xc = xc + h
         hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)

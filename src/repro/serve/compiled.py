@@ -4,6 +4,12 @@
 functions (suffix prefill into the page pools, one-token paged decode);
 building them here keeps the `models.prefill_paged` /
 `models.decode_step_paged` call signatures in exactly one place.
+
+`impl` selects the paged-attention kernel path (`ops.resolve_impl`
+semantics) and is closed over statically, so one engine can pin the
+native kernel (`"pallas"`, strict — raises off-TPU at trace time), the
+interpreter (`"pallas_interpret"`, the CPU correctness tool) or the
+oracle, while `"auto"` keeps the silent backend dispatch.
 """
 
 from __future__ import annotations
@@ -14,22 +20,22 @@ from ..configs.base import ModelConfig
 from ..models import decode_step_paged, prefill_paged
 
 
-def jit_paged_prefill(cfg: ModelConfig):
+def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto"):
     """(params, toks, k_pages, v_pages, block_table, start, total,
     last_pos) -> (logits, k_pages, v_pages). Retraces once per padded
     suffix-length bucket (`toks.shape`)."""
     return jax.jit(
         lambda p, toks, kp, vp, bt, st, tot, lp: prefill_paged(
-            p, toks, kp, vp, bt, st, tot, cfg, last_pos=lp
+            p, toks, kp, vp, bt, st, tot, cfg, last_pos=lp, impl=impl
         )
     )
 
 
-def jit_paged_decode(cfg: ModelConfig):
+def jit_paged_decode(cfg: ModelConfig, impl: str = "auto"):
     """(params, token, k_pages, v_pages, block_table, positions) ->
     (logits, k_pages, v_pages)."""
     return jax.jit(
         lambda p, t, kp, vp, bt, pos: decode_step_paged(
-            p, t, kp, vp, bt, pos, cfg
+            p, t, kp, vp, bt, pos, cfg, impl=impl
         )
     )

@@ -10,6 +10,15 @@ native on TPU), cutting decode HBM traffic by 16/n_bits.
 block-paged cache (serve.paged_cache, DESIGN.md §8): decode attention
 gathers pages through a block table with per-slot positions. The dense
 path remains the default fallback.
+
+`ServeConfig.eos_token >= 0` enables early stopping: a sequence that
+emits the EOS token stops decoding (the EOS itself is kept in the
+output), and generation returns as soon as every batch row has stopped —
+rows that finished earlier are padded with the EOS token, so the
+returned width is the number of decode iterations actually run, not
+`max_new_tokens`. In the paged path a stopped row also releases its
+pages immediately; its slot's block table falls back to the scratch
+page, which absorbs the remaining ticks' unconditional KV scatters.
 """
 
 from __future__ import annotations
@@ -19,6 +28,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import decode_step, init_cache, prefill
@@ -35,6 +45,7 @@ class ServeConfig:
     eos_token: int = -1       # -1 = never stop early
     paged: bool = False       # block-paged KV cache (per-slot positions)
     block_size: int = 16      # KV page size in tokens (paged mode)
+    kernel_impl: str = "auto"  # paged-attention kernel path (resolve_impl)
 
 
 class ServeEngine:
@@ -47,8 +58,10 @@ class ServeEngine:
             lambda p, t: prefill(p, t, cfg, cache_len=serve_cfg.max_cache_len)
         )
         self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
-        self._decode_paged = jit_paged_decode(cfg)
-        self._prefill_paged = jit_paged_prefill(cfg)
+        self._decode_paged = jit_paged_decode(cfg, impl=serve_cfg.kernel_impl)
+        self._prefill_paged = jit_paged_prefill(
+            cfg, impl=serve_cfg.kernel_impl
+        )
 
     def quantize(self, qcfg: Optional[PimQuantConfig] = None) -> float:
         """Convert projection weights to PIM-resident bit-planes."""
@@ -60,18 +73,41 @@ class ServeEngine:
         self.packed_fraction = tree_packed_fraction(self.params)
         return self.packed_fraction
 
+    # -- EOS bookkeeping ---------------------------------------------------
+
+    def _eos_hits(self, tok: jnp.ndarray) -> np.ndarray:
+        """[B] bool: which rows of a [B, 1] token batch just emitted EOS."""
+        if self.sc.eos_token < 0:
+            return np.zeros((tok.shape[0],), bool)
+        return np.asarray(tok[:, 0]) == self.sc.eos_token
+
+    def _pad_done(self, tok: jnp.ndarray, done: np.ndarray) -> jnp.ndarray:
+        """Rows that already stopped keep emitting EOS (output padding)."""
+        if self.sc.eos_token < 0 or not done.any():
+            return tok
+        return jnp.where(
+            jnp.asarray(done)[:, None], jnp.int32(self.sc.eos_token), tok
+        )
+
     def generate(
         self, prompts: jnp.ndarray, rng: Optional[jax.Array] = None
     ) -> jnp.ndarray:
-        """Greedy/temperature generation for a [B, T] prompt batch."""
+        """Greedy/temperature generation for a [B, T] prompt batch.
+        Returns [B, n] with n <= max_new_tokens when eos_token stops every
+        row early."""
         if self.sc.paged:
             return self._generate_paged(prompts, rng)
         b, t = prompts.shape
         logits, cache = self._prefill(self.params, prompts)
         out = []
+        done = np.zeros((b,), bool)
         tok = self._sample(logits[:, -1], rng)
         for i in range(self.sc.max_new_tokens):
+            tok = self._pad_done(tok, done)
             out.append(tok)
+            done = done | self._eos_hits(tok)
+            if done.all() or i == self.sc.max_new_tokens - 1:
+                break  # the last appended token needs no follow-up decode
             logits, cache = self._decode(self.params, tok, cache)
             tok = self._sample(logits[:, -1], rng)
         return jnp.concatenate(out, axis=-1)
@@ -101,16 +137,28 @@ class ServeEngine:
         )
         pc.lengths[:] = t
         out = []
+        done = np.zeros((b,), bool)
         tok = self._sample(logits[:, -1], rng)
-        for _ in range(self.sc.max_new_tokens):
+        for it in range(self.sc.max_new_tokens):
+            tok = self._pad_done(tok, done)
             out.append(tok)
+            for i in np.flatnonzero(self._eos_hits(tok) & ~done):
+                # a stopped row releases its pages immediately; its table
+                # falls back to scratch, which absorbs later KV scatters
+                pc.free_slot(int(i))
+                done[i] = True
+            if done.all() or it == self.sc.max_new_tokens - 1:
+                break  # the last appended token needs no follow-up decode
             for i in range(b):
-                pc.begin_append(i, int(pc.lengths[i]), 1)
+                if not done[i]:
+                    pc.begin_append(i, int(pc.lengths[i]), 1)
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, tok, pc.k_pages, pc.v_pages,
                 pc.device_block_table(), pc.device_positions(),
             )
-            pc.lengths[:] += 1
+            for i in range(b):
+                if not done[i]:
+                    pc.lengths[i] += 1
             tok = self._sample(logits[:, -1], rng)
         return jnp.concatenate(out, axis=-1)
 

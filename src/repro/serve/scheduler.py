@@ -29,6 +29,16 @@ Two cache modes:
 Admission scans the queue for the FIRST request the pool can admit
 (FIFO among admissible) instead of blocking on the queue head — a large
 request waiting for pages no longer starves small ones behind it.
+
+Liveness: a slot whose request completes AT prefill (max_new_tokens=1,
+or an EOS continuation) frees its pages and is retried immediately, so
+the freed pages can admit a queued request within the same tick; and
+`run_until_drained` raises the moment a tick advances nothing and
+admits nothing while requests are queued (a deadlock — nothing can ever
+free pages) instead of spinning out the tick budget.
+
+`eos_token >= 0` stops a slot early when it emits that token: the EOS
+is kept in the output and the slot's pages recycle the same tick.
 """
 
 from __future__ import annotations
@@ -95,6 +105,8 @@ class ContinuousBatcher:
         block_size: int = 16,
         n_blocks: int = 0,
         prefix: bool = False,
+        eos_token: int = -1,
+        kernel_impl: str = "auto",
     ):
         self.cfg = cfg
         self.params = params
@@ -102,6 +114,9 @@ class ContinuousBatcher:
         self.cache_len = cache_len
         self.prompt_len = prompt_len
         self.paged = paged
+        #: -1 = never stop early; >= 0 = a slot that emits this token
+        #: finishes immediately and frees its pages the same tick
+        self.eos_token = eos_token
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
@@ -119,11 +134,11 @@ class ContinuousBatcher:
                 n_blocks=n_blocks,
             )
             self.cache = None
-            self._decode_paged = jit_paged_decode(cfg)
+            self._decode_paged = jit_paged_decode(cfg, impl=kernel_impl)
             # suffixes are right-padded to a block-size multiple, so this
             # retraces once per bucket and `last_pos` selects the true
             # suffix end dynamically
-            self._prefill_paged = jit_paged_prefill(cfg)
+            self._prefill_paged = jit_paged_prefill(cfg, impl=kernel_impl)
         else:
             self.pcache = None
             self.cache = init_cache(cfg, n_slots, cache_len)
@@ -139,13 +154,18 @@ class ContinuousBatcher:
 
     def _fill_slots(self):
         for i in range(self.n_slots):
-            if self.slots[i] is None and self.queue:
+            # a request can complete AT prefill (max_new_tokens == 1, or
+            # the prompt's continuation is EOS): its pages free
+            # immediately and the slot stays empty — retry the SAME slot,
+            # since the freed pages may make a queued request admissible
+            # this very tick instead of idling the slot for a whole tick
+            while self.slots[i] is None and self.queue:
                 if self.paged:
                     admitted = self._admit_paged(i)
                     if admitted is None:
                         # nothing in the queue fits right now; later slots
                         # see the same pool, so stop scanning this tick
-                        break
+                        return
                     req, pages, n_cached = admitted
                     self._prefill_into_paged(i, req, pages, n_cached)
                 else:
@@ -246,13 +266,17 @@ class ContinuousBatcher:
             self.prefix.publish(req.prompt, pc, i, keys=req.block_keys)
         self._start_slot(i, req, logits)
 
+    def _hit_eos(self, tok: int) -> bool:
+        return self.eos_token >= 0 and tok == self.eos_token
+
     def _start_slot(self, i: int, req: Request, logits):
         nxt = int(jnp.argmax(logits[0, -1]))
         req.generated.append(nxt)
-        if req.done:
-            # max_new_tokens == 1: the prefill token completes the
-            # request — entering decode would emit an extra token (and
-            # write KV past the slot's reservation)
+        if req.done or self._hit_eos(nxt):
+            # the prefill token completes the request (max_new_tokens == 1,
+            # or the prompt's continuation is EOS) — entering decode would
+            # emit an extra token (and write KV past the slot's
+            # reservation); pages free immediately
             self.finished[req.uid] = req.generated
             if self.paged:
                 self.pcache.free_slot(i)
@@ -265,9 +289,14 @@ class ContinuousBatcher:
     def step(self) -> int:
         """One scheduler tick: fill free slots, decode once. Returns the
         number of active slots advanced."""
+        n_finished = len(self.finished)
         self._fill_slots()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
+            if len(self.finished) > n_finished:
+                # prefill-only tick: every admitted request completed AT
+                # prefill (same-slot retry) — real work, count the tick
+                self.ticks += 1
             return 0
         if self.paged:
             nxt = self._step_paged(active)
@@ -276,8 +305,11 @@ class ContinuousBatcher:
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         for i in active:
             req = self.slots[i]
-            req.generated.append(int(nxt[i]))
-            if req.done:
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            if req.done or self._hit_eos(tok):
+                # finished by budget or by EOS: the slot's pages recycle
+                # this very tick, before the next _fill_slots admission
                 self.finished[req.uid] = req.generated
                 if self.paged:
                     self.pcache.free_slot(i)
@@ -299,17 +331,54 @@ class ContinuousBatcher:
             pc.lengths[i] += 1
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
+    def _pool_diagnostic(self) -> str:
+        if self.pcache is None:
+            return ""
+        pc = self.pcache
+        return (
+            f"; pool: {pc.n_free}/{pc.n_blocks - 1} pages free, "
+            f"{pc.available_blocks()} unreserved, "
+            f"occupancy={pc.slot_occupancy():.2f}"
+        )
+
     def run_until_drained(
         self, max_ticks: int = 10_000, strict: bool = True
     ) -> Dict[int, List[int]]:
         """Drain the queue. If `max_ticks` is exhausted with work still
         pending, raise RuntimeError (strict=True, default) or warn —
         never silently return partial results; completed requests stay
-        available in `self.finished` either way."""
+        available in `self.finished` either way.
+
+        A tick that advances zero slots, admits nothing AND frees no
+        pages while requests are still queued is a livelock, not slow
+        progress: with no active slot and an unchanged pool, no future
+        tick can ever free pages, so spinning the remaining `max_ticks`
+        would burn time and then mis-report the deadlock as a
+        tick-budget problem. That state raises immediately (regardless
+        of `strict`) with a pool-occupancy diagnostic. The free-count
+        check matters with the prefix index: a failed admission may
+        still have EVICTED index pages, which a later tick's smaller
+        deficit can turn into an admission."""
         ticks = 0
         while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
-            self.step()
+            queued_before = len(self.queue)
+            free_before = self.pcache.n_free if self.paged else 0
+            advanced = self.step()
             ticks += 1
+            if (
+                advanced == 0
+                and self.queue
+                and len(self.queue) == queued_before
+                and (not self.paged or self.pcache.n_free == free_before)
+            ):
+                raise RuntimeError(
+                    f"run_until_drained: deadlock at tick {ticks} — no "
+                    f"slot is active and none of the {len(self.queue)} "
+                    f"queued requests is admissible, so no future tick "
+                    f"can free pages or make progress "
+                    f"({len(self.finished)} finished)"
+                    f"{self._pool_diagnostic()}"
+                )
         pending = len(self.queue) + sum(s is not None for s in self.slots)
         if pending:
             msg = (

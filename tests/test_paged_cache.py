@@ -245,3 +245,127 @@ def test_engine_paged_matches_dense(model):
                     block_size=4),
     ).generate(prompts)
     np.testing.assert_array_equal(np.asarray(dense), np.asarray(paged))
+
+
+# ---------------------------------------------------------------------------
+# EOS early stop (engine paths + per-slot in the batcher)
+# ---------------------------------------------------------------------------
+
+def test_engine_eos_stops_early(model):
+    """A mid-stream EOS shortens the returned width in BOTH engine paths;
+    rows that stop earlier are padded with EOS; eos_token=-1 reproduces
+    the full-budget output bit-exactly."""
+    cfg, params = model
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(9), (2, 8), 0, cfg.vocab_size
+    )
+    n_new = 8
+    base = np.asarray(ServeEngine(
+        cfg, params, ServeConfig(max_cache_len=32, max_new_tokens=n_new)
+    ).generate(prompts))
+    # pick the token row 0 emits at step 2 as EOS: row 0 must stop there
+    eos = int(base[0, 2])
+    stop0 = int(np.flatnonzero(base[0] == eos)[0])
+    assert eos not in base[1]  # row 1 runs its full budget
+    for paged in (False, True):
+        sc = ServeConfig(max_cache_len=32, max_new_tokens=n_new,
+                         eos_token=eos, paged=paged, block_size=4)
+        eng = ServeEngine(cfg, params, sc)
+        # single-row batch: generation returns as soon as the row stops
+        solo = np.asarray(eng.generate(prompts[:1]))
+        assert solo.shape == (1, stop0 + 1), (paged, solo)
+        np.testing.assert_array_equal(solo[0], base[0, : stop0 + 1])
+        # two-row batch: row 1 never stops, so the width is the full
+        # budget and row 0 is EOS-padded past its stop
+        out = np.asarray(eng.generate(prompts))
+        assert out.shape == (2, n_new)
+        np.testing.assert_array_equal(out[0, : stop0 + 1],
+                                      base[0, : stop0 + 1])
+        assert (out[0, stop0:] == eos).all()
+        np.testing.assert_array_equal(out[1], base[1])
+
+
+def test_batcher_eos_stops_slot_and_frees_pages(model):
+    """Per-slot EOS in the continuous batcher: the stopped request's
+    output ends at the EOS (shorter than its budget) and its pages are
+    released the same tick — observed mid-run, not just after drain."""
+    cfg, params = model
+    lens = [5, 8, 13]
+    prompts = [_prompt(u, t, cfg.vocab_size) for u, t in enumerate(lens)]
+    n_new = 8
+    cb0 = ContinuousBatcher(
+        cfg, params, n_slots=3, cache_len=32, paged=True, block_size=4
+    )
+    for u, p in enumerate(prompts):
+        cb0.submit(Request(uid=u, prompt=p, max_new_tokens=n_new))
+    base = cb0.run_until_drained()
+    eos = base[0][3]  # request 0's 4th token
+    stop0 = base[0].index(eos)
+
+    cb = ContinuousBatcher(
+        cfg, params, n_slots=3, cache_len=32, paged=True, block_size=4,
+        eos_token=eos,
+    )
+    for u, p in enumerate(prompts):
+        cb.submit(Request(uid=u, prompt=p, max_new_tokens=n_new))
+    freed_tick = None
+    while cb.queue or any(s is not None for s in cb.slots):
+        cb.step()
+        if 0 in cb.finished and freed_tick is None:
+            freed_tick = cb.ticks
+            # pages released the tick the EOS was emitted, while the
+            # other slots still decode
+            assert cb.pcache.owned_blocks(0) == ()
+            assert cb.pcache.lengths[0] == 0
+            cb.pcache.check_invariants()
+    res = cb.finished
+    assert res[0] == base[0][: stop0 + 1]
+    assert res[0][-1] == eos and len(res[0]) < n_new
+    assert freed_tick is not None and freed_tick <= stop0 + 1
+    # requests that never emit EOS are untouched
+    for u in (1, 2):
+        if eos not in base[u]:
+            assert res[u] == base[u]
+    cb.pcache.check_invariants()
+    assert cb.pcache.n_free == cb.pcache.n_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler liveness fixes
+# ---------------------------------------------------------------------------
+
+def test_run_until_drained_raises_immediately_on_deadlock(model):
+    """No active slot + nothing admissible = no future tick can free
+    pages: run_until_drained must diagnose that immediately instead of
+    spinning all max_ticks and mis-reporting a tick-budget problem."""
+    cfg, params = model
+    cb = ContinuousBatcher(
+        cfg, params, n_slots=1, cache_len=16, paged=True, block_size=4
+    )
+    pc = cb.pcache
+    # an external holder pins most of the pool (the shape a snapshot or
+    # index component produces): admission can never succeed
+    while pc.n_free > 1:
+        pc._ref[pc.free_blocks.popleft()] = 1
+    cb.submit(Request(uid=0, prompt=_prompt(0, 8, cfg.vocab_size),
+                      max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="deadlock at tick 1.*pool:"):
+        cb.run_until_drained(max_ticks=10_000)
+
+
+def test_prefill_complete_requests_drain_through_one_slot_in_one_tick(model):
+    """max_new_tokens=1 requests finish AT prefill and free their pages;
+    the scheduler must retry the same slot instead of idling it a full
+    tick per request."""
+    cfg, params = model
+    cb = ContinuousBatcher(
+        cfg, params, n_slots=1, cache_len=16, paged=True, block_size=4
+    )
+    for u in range(3):
+        cb.submit(Request(uid=u, prompt=_prompt(u, 5, cfg.vocab_size),
+                          max_new_tokens=1))
+    cb.step()  # ONE tick
+    assert set(cb.finished) == {0, 1, 2}
+    assert all(len(v) == 1 for v in cb.finished.values())
+    cb.pcache.check_invariants()
+    assert cb.pcache.n_free == cb.pcache.n_blocks - 1

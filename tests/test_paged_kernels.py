@@ -1,0 +1,247 @@
+"""Native paged-attention kernels: interpret-mode parity vs the ref.py
+oracles across the full ragged/window/offset/COW matrix, plus the strict
+impl-dispatch rules (ISSUE 3 / DESIGN.md §10).
+
+The kernels fold every block-table page with the oracle's exact masked
+math, so parity must hold for ALL rows — including don't-care outputs
+(length-0 idle slots, padded suffix rows past `total`)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.paged_attention import paged_attention, paged_decode_attention
+from repro.kernels.paged_prefill import paged_prefill, paged_prefill_attention
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _pools(rng, nb, bs, kv, hd, dtype=jnp.float32):
+    kp = jnp.asarray(rng.normal(size=(nb, bs, kv, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(nb, bs, kv, hd)), dtype)
+    return kp, vp
+
+
+def _assert_decode_parity(q, kp, vp, bt, lengths, window):
+    a = ref.paged_attention_ref(q, kp, vp, bt, lengths, window)
+    b = paged_decode_attention(q, kp, vp, bt, lengths, window, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+def _assert_prefill_parity(q, kp, vp, bt, start, total, window):
+    a = ref.paged_prefill_ref(q, kp, vp, bt, start, total, window)
+    b = paged_prefill_attention(
+        q, kp, vp, bt, start, total, window, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# decode matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [64, 3, 1])
+@pytest.mark.parametrize("lengths", [[5, 12, 1], [0, 12, 4], [0, 0, 1]])
+def test_decode_ragged_lengths_and_windows(rng, window, lengths):
+    """Ragged lengths including idle (0) and single-token (1) slots, full
+    attention and sliding windows shorter than the longest length."""
+    B, H, KV, hd, bs, nb, mb = 3, 4, 2, 8, 4, 10, 3
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[: B * mb].reshape(B, mb), jnp.int32
+    )
+    _assert_decode_parity(
+        q, kp, vp, bt, jnp.asarray(lengths, jnp.int32),
+        jnp.asarray(window, jnp.int32),
+    )
+
+
+def test_decode_single_block_table(rng):
+    """max_blocks == 1: the degenerate walk (warm-up step is also the
+    last step of each slot)."""
+    B, H, KV, hd, bs, nb = 2, 4, 2, 8, 4, 5
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray([[3], [1]], jnp.int32)
+    _assert_decode_parity(
+        q, kp, vp, bt, jnp.asarray([4, 2], jnp.int32),
+        jnp.asarray(16, jnp.int32),
+    )
+
+
+def test_decode_full_pool_table(rng):
+    """Every non-scratch page of the pool appears in some slot's table —
+    the table capacity equals the pool."""
+    B, H, KV, hd, bs, nb = 2, 4, 2, 8, 4, 9
+    mb = (nb - 1) // B  # 4 blocks per slot, 8 pages = whole usable pool
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, nb)).reshape(B, mb), jnp.int32
+    )
+    _assert_decode_parity(
+        q, kp, vp, bt, jnp.asarray([mb * bs, mb * bs - 3], jnp.int32),
+        jnp.asarray(mb * bs, jnp.int32),
+    )
+
+
+def test_decode_cow_fragmented_tables(rng):
+    """COW-world tables: non-contiguous, non-monotonic page ids, pages
+    shared between slots, and a page repeated within one slot's table."""
+    B, H, KV, hd, bs, nb, mb = 3, 4, 2, 8, 4, 12, 4
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        [[7, 2, 11, 3],    # non-contiguous, non-monotonic
+         [2, 7, 2, 5],     # shares pages 2 and 7 with slot 0, repeats 2
+         [10, 1, 4, 9]],
+        jnp.int32,
+    )
+    _assert_decode_parity(
+        q, kp, vp, bt, jnp.asarray([13, 16, 9], jnp.int32),
+        jnp.asarray(6, jnp.int32),
+    )
+
+
+def test_decode_bf16_pool(rng):
+    """bf16 page pools (the serving default) load through the DMA scratch
+    and fold in f32, exactly like the oracle."""
+    B, H, KV, hd, bs, nb, mb = 2, 4, 2, 8, 4, 6, 2
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd, jnp.bfloat16)
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    _assert_decode_parity(
+        q, kp, vp, bt, jnp.asarray([6, 8], jnp.int32),
+        jnp.asarray(8, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [64, 5])
+@pytest.mark.parametrize(
+    "start,total",
+    [
+        ([0, 0, 0], [6, 11, 4]),     # prefix miss: full causal prefill
+        ([4, 8, 4], [11, 9, 12]),    # prefix hits: offset causal mask
+        ([8, 0, 11], [9, 1, 12]),    # full-hit 1-token recompute + tiny
+    ],
+)
+def test_prefill_offsets_ragged_windows(rng, window, start, total):
+    """Prefix offsets (including the full-hit single-token recompute),
+    ragged totals with padded query rows, and sliding windows."""
+    B, T, H, KV, hd, bs, nb, mb = 3, 8, 4, 2, 8, 4, 10, 3
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[: B * mb].reshape(B, mb), jnp.int32
+    )
+    _assert_prefill_parity(
+        q, kp, vp, bt, jnp.asarray(start, jnp.int32),
+        jnp.asarray(total, jnp.int32), jnp.asarray(window, jnp.int32),
+    )
+
+
+def test_prefill_single_block_table(rng):
+    B, T, H, KV, hd, bs, nb = 2, 4, 4, 2, 8, 4, 5
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray([[2], [4]], jnp.int32)
+    _assert_prefill_parity(
+        q, kp, vp, bt, jnp.asarray([0, 0], jnp.int32),
+        jnp.asarray([4, 3], jnp.int32), jnp.asarray(16, jnp.int32),
+    )
+
+
+def test_prefill_cow_fragmented_tables(rng):
+    """Shared-prefix tables: the same prefix pages mapped into several
+    slots (refcounted sharing) with distinct suffix pages, plus an
+    in-slot repeated page."""
+    B, T, H, KV, hd, bs, nb, mb = 3, 8, 4, 2, 8, 4, 12, 4
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        [[5, 9, 1, 3],
+         [5, 9, 2, 7],     # shares the 2-page prefix {5, 9} with slot 0
+         [5, 5, 10, 4]],   # repeated page
+        jnp.int32,
+    )
+    _assert_prefill_parity(
+        q, kp, vp, bt, jnp.asarray([8, 8, 4], jnp.int32),
+        jnp.asarray([14, 16, 10], jnp.int32), jnp.asarray(7, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# impl dispatch matrix (strict explicit values, silent auto)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def decode_args(rng):
+    B, H, KV, hd, bs, nb, mb = 2, 4, 2, 8, 4, 6, 2
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    return (q, kp, vp, bt, jnp.asarray([5, 7], jnp.int32),
+            jnp.asarray(8, jnp.int32))
+
+
+@pytest.fixture
+def prefill_args(decode_args):
+    q, kp, vp, bt, lengths, win = decode_args
+    qp = jnp.tile(q[:, None], (1, 4, 1, 1))
+    return (qp, kp, vp, bt, jnp.asarray([0, 4], jnp.int32),
+            jnp.asarray([4, 7], jnp.int32), win)
+
+
+@pytest.mark.skipif(
+    jax.default_backend() == "tpu", reason="strictness is the off-TPU rule"
+)
+def test_explicit_pallas_is_strict_off_tpu(decode_args, prefill_args):
+    with pytest.raises(RuntimeError, match="native TPU kernel"):
+        paged_attention(*decode_args, impl="pallas")
+    with pytest.raises(RuntimeError, match="native TPU kernel"):
+        paged_prefill(*prefill_args, impl="pallas")
+    # the shared resolve_impl rule also covers the bit-plane ops
+    with pytest.raises(RuntimeError, match="native TPU kernel"):
+        ops.bitplane_matmul(
+            jnp.ones((2, 8)), jnp.zeros((1, 1, 4), jnp.uint8),
+            jnp.ones((4,)), n_bits=8, impl="pallas",
+        )
+
+
+def test_unknown_impl_raises(decode_args, prefill_args):
+    with pytest.raises(ValueError, match="unknown impl"):
+        paged_attention(*decode_args, impl="cuda")
+    with pytest.raises(ValueError, match="unknown impl"):
+        paged_prefill(*prefill_args, impl="")
+
+
+def test_auto_and_interpret_dispatch(decode_args, prefill_args):
+    """`auto` silently picks the oracle off-TPU (and the native kernel on
+    TPU); `pallas_interpret` always runs the kernel body, matching the
+    oracle to fp32 tolerance; `ref` is the oracle by definition."""
+    expect_d = ref.paged_attention_ref(*decode_args)
+    expect_p = ref.paged_prefill_ref(*prefill_args)
+    if jax.default_backend() != "tpu":
+        np.testing.assert_array_equal(
+            np.asarray(paged_attention(*decode_args, impl="auto")),
+            np.asarray(expect_d),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(paged_prefill(*prefill_args, impl="auto")),
+            np.asarray(expect_p),
+        )
+    np.testing.assert_allclose(
+        np.asarray(paged_attention(*decode_args, impl="pallas_interpret")),
+        np.asarray(expect_d), **TOL,
+    )
+    np.testing.assert_allclose(
+        np.asarray(paged_prefill(*prefill_args, impl="pallas_interpret")),
+        np.asarray(expect_p), **TOL,
+    )
