@@ -84,13 +84,21 @@ def kernel_bench() -> List[Row]:
 
 
 def paged_attention_bench() -> List[Row]:
-    """Paged decode + prefill kernels (DESIGN.md §10): interpret-mode
-    parity error vs the jnp oracles, and the per-call KV bytes the
+    """Paged decode + prefill kernels (DESIGN.md §10-§11): interpret-mode
+    parity error vs the jnp oracles, the per-call KV bytes the
     scalar-prefetch block walk streams (max_blocks pages per slot)
     against the whole-pool copy the pre-rewrite BlockSpec forced into
-    every grid step. Writes ``results/paged_kernel_bench.json``."""
-    from repro.kernels import ref
-    from repro.kernels.paged_attention import paged_decode_attention
+    every grid step, and a raggedness sweep of the length-bucketed
+    dispatch (streamed bytes + interpret walltime vs the unbucketed
+    walk). Asserts that on ragged (geometric-length) workloads the
+    bucketed dispatch streams <= 50% of the unbucketed bytes with
+    bit-identical valid-row outputs. Writes
+    ``results/paged_kernel_bench.json``."""
+    from repro.kernels import ops, ref
+    from repro.kernels.paged_attention import (
+        paged_decode_attention,
+        paged_decode_attention_bucketed,
+    )
     from repro.kernels.paged_prefill import paged_prefill_attention
 
     rng = np.random.default_rng(0)
@@ -138,10 +146,142 @@ def paged_attention_bench() -> List[Row]:
             f"whole_pool_bytes={pool_bytes};"
             f"gather_reduction={report['gather_reduction']:.0%}",
         ))
+
+    # -- length-bucketed dispatch raggedness sweep (DESIGN.md §11) --------
+    bB, bbs, bmb, bnb = 8, 8, 32, 64
+    bq = jnp.asarray(rng.normal(size=(bB, H, hd)), jnp.float32)
+    bkp = jnp.asarray(rng.normal(size=(bnb, bbs, KV, hd)), jnp.float32)
+    bvp = jnp.asarray(rng.normal(size=(bnb, bbs, KV, hd)), jnp.float32)
+    bbt = jnp.asarray(
+        rng.integers(1, bnb, size=(bB, bmb)), jnp.int32
+    )
+    cap = bmb * bbs
+    profiles = {
+        # every slot at capacity: the plan degenerates and falls back to
+        # the single launch — bucketing must never stream MORE
+        "uniform_full": np.full((bB,), cap, np.int64),
+        # the acceptance workload: geometric lengths, most slots hold a
+        # page or two of a 32-page-deep table
+        "geometric": np.minimum(rng.geometric(0.08, size=bB), cap),
+        # half long, half short — the mixed continuous-batching shape
+        "mixed": np.where(np.arange(bB) % 2 == 0, cap,
+                          rng.integers(1, 3 * bbs, size=bB)),
+    }
+    bwin = jnp.asarray(cap, jnp.int32)
+    page_b = bbs * KV * hd * itemsize
+    unbucketed_pages = bB * bmb
+    report["bucketed"] = {
+        "shape": {"slots": bB, "block_size": bbs, "table_depth": bmb,
+                  "pool_blocks": bnb},
+        "kv_bytes_unbucketed": 2 * unbucketed_pages * page_b,
+        "profiles": {},
+    }
+    for pname, lens in profiles.items():
+        lens_j = jnp.asarray(lens, jnp.int32)
+        plan, perm = ops.make_bucket_plan(lens, bbs, bmb)
+        streamed = ops.plan_streamed_pages(plan, bB, bmb)
+        single_us = _bench(
+            lambda q_, l_: paged_decode_attention(
+                q_, bkp, bvp, bbt, l_, bwin, interpret=True
+            ), bq, lens_j,
+        )
+        if plan is None:
+            buck_us, exact = single_us, True
+        else:
+            buck_us = _bench(
+                lambda q_, l_: paged_decode_attention_bucketed(
+                    q_, bkp, bvp, bbt, l_, bwin, plan, perm, interpret=True
+                ), bq, lens_j,
+            )
+            a = np.asarray(paged_decode_attention(
+                bq, bkp, bvp, bbt, lens_j, bwin, interpret=True
+            ))
+            b = np.asarray(paged_decode_attention_bucketed(
+                bq, bkp, bvp, bbt, lens_j, bwin, plan, perm, interpret=True
+            ))
+            exact = bool(np.array_equal(a[lens > 0], b[lens > 0]))
+        frac = streamed / unbucketed_pages
+        report["bucketed"]["profiles"][pname] = {
+            "lengths": [int(x) for x in lens],
+            "plan": list(plan) if plan is not None else None,
+            "kv_pages_streamed": streamed,
+            "kv_bytes_streamed": 2 * streamed * page_b,
+            "streamed_fraction": round(frac, 3),
+            "interpret_us_bucketed": round(buck_us, 1),
+            "interpret_us_single": round(single_us, 1),
+            "valid_rows_bit_exact": exact,
+        }
+        assert exact, f"bucketed/{pname}: valid rows diverged"
+        assert streamed <= unbucketed_pages, pname
+        if pname == "geometric":
+            # the acceptance bound: ragged decode must stream <= 50%
+            assert frac <= 0.5, (pname, frac)
+        if pname == "mixed":
+            # CI smoke bound: STRICTLY fewer bytes on any ragged load
+            assert streamed < unbucketed_pages, (pname, streamed)
+        rows.append((
+            f"kernel/paged_bucketed_{pname}", buck_us,
+            f"streamed_pages={streamed}/{unbucketed_pages};"
+            f"fraction={frac:.0%};single_us={single_us:.0f};"
+            f"bit_exact={exact}",
+        ))
+
     os.makedirs("results", exist_ok=True)
     with open(os.path.join("results", "paged_kernel_bench.json"), "w") as f:
         json.dump(report, f, indent=1)
     return rows
+
+
+def bucketed_serve_smoke() -> List[Row]:
+    """End-to-end CI guard for the bucketed dispatch (DESIGN.md §11):
+    drain one ragged trace through the continuous batcher twice with the
+    kernels forced through the Pallas interpreter — bucketed dispatch vs
+    the single-launch walk — and assert the generated tokens are
+    IDENTICAL while the bucketed plan streams strictly fewer KV pages.
+    A deliberately tiny model: the point is the dispatch layer, not the
+    math (the kernels' parity matrix lives in tests/)."""
+    from repro.configs.base import ModelConfig
+    from repro.kernels import ops
+    from repro.models import init_lm
+    from repro.serve import ContinuousBatcher, Request
+
+    cfg = ModelConfig(
+        name="bucket-smoke", family="dense", n_layers=2, d_model=16,
+        n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=64, dtype="float32",
+    )
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    bs, cache_len, prompt_lens = 4, 64, [3, 21, 5, 13]
+
+    def drain(strategy):
+        cb = ContinuousBatcher(
+            cfg, params, n_slots=2, cache_len=cache_len, paged=True,
+            block_size=bs, kernel_impl="pallas_interpret",
+            bucket_strategy=strategy,
+        )
+        for uid, t in enumerate(prompt_lens):
+            p = jax.random.randint(
+                jax.random.fold_in(jax.random.PRNGKey(5), uid), (t,), 0,
+                cfg.vocab_size,
+            ).astype(jnp.int32)
+            cb.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        t0 = time.perf_counter()
+        out = cb.run_until_drained()
+        return out, time.perf_counter() - t0
+
+    buck, t_buck = drain("pow2")
+    single, t_single = drain("none")
+    assert buck == single, "bucketed serving diverged from single-launch"
+    # the structural win on this trace: pages one decode tick streams
+    # for a ragged 2-slot batch vs the full-depth walk
+    mb = cache_len // bs
+    plan, _ = ops.make_bucket_plan([4, 22], bs, mb)
+    streamed = ops.plan_streamed_pages(plan, 2, mb)
+    assert streamed < 2 * mb, (streamed, 2 * mb)
+    return [(
+        "kernel/bucketed_serve_smoke", t_buck * 1e6,
+        f"tokens_equal=True;single_us={t_single * 1e6:.0f};"
+        f"tick_pages={streamed}/{2 * mb}",
+    )]
 
 
 def reduction_schedule_bench() -> List[Row]:
@@ -167,11 +307,16 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged-only", action="store_true",
-                    help="run just the paged-attention case (CI smoke)")
+                    help="run just the paged-attention cases (CI smoke: "
+                         "kernel parity + bucketed sweep + serve smoke)")
     args = ap.parse_args()
-    sections = [paged_attention_bench] if args.paged_only else [
-        kernel_bench, paged_attention_bench, reduction_schedule_bench,
-    ]
+    sections = (
+        [paged_attention_bench, bucketed_serve_smoke] if args.paged_only
+        else [
+            kernel_bench, paged_attention_bench, bucketed_serve_smoke,
+            reduction_schedule_bench,
+        ]
+    )
     print("name,us_per_call,derived")
     for fn in sections:
         for name, us, derived in fn():

@@ -14,8 +14,11 @@ through the paged continuous batcher twice:
              uncached suffix through the paged-prefill kernel.
 
 Reports prefill tokens processed, pages drawn from the pool, COW events,
-index hit stats, and **greedy-token parity** (the shared run must emit
-bit-identical tokens — fp32 smoke config, like tests/test_paged_cache).
+index hit stats, cross-layer dedup accounting (per-layer physical copies
+of logically-shared pages, sampled at peak sharing — the DESIGN.md §9
+layer-major follow-on, measurement only), and **greedy-token parity**
+(the shared run must emit bit-identical tokens — fp32 smoke config, like
+tests/test_paged_cache).
 Writes ``results/prefix_bench.json``. Wall time on this CPU host is not
 the TPU story; the structural quantities (prefill tokens, page draws)
 are machine-independent.
@@ -72,10 +75,24 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
     )
     for uid, p in enumerate(prompts):
         cb.submit(Request(uid=uid, prompt=p, max_new_tokens=new_tokens))
-    t0 = time.perf_counter()
-    results = cb.run_until_drained()
-    dt = time.perf_counter() - t0
     pc = cb.pcache
+    # sample the cross-layer dedup stats (DESIGN.md §9 follow-on,
+    # measurement only) every tick, keeping the PEAK — after the drain
+    # only the index holds pages and every refcount is back to 1, which
+    # would hide the dedup entirely
+    peak = pc.cross_layer_dedup_stats()
+
+    def sample(_cb):
+        nonlocal peak
+        s = pc.cross_layer_dedup_stats()
+        if (s["extra_refs"], s["allocated_pages"]) > (
+            peak["extra_refs"], peak["allocated_pages"]
+        ):
+            peak = s
+
+    t0 = time.perf_counter()
+    results = cb.run_until_drained(on_tick=sample)
+    dt = time.perf_counter() - t0
     stats = {
         "requests": len(results),
         "decode_tokens": sum(len(v) for v in results.values()),
@@ -84,6 +101,8 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
         "cow_events": pc.cow_events,
         "ticks": cb.ticks,
         "wall_s": round(dt, 3),
+        "cross_layer_peak": peak,
+        "cross_layer_final": pc.cross_layer_dedup_stats(),
     }
     if prefix:
         ix = cb.prefix
@@ -162,6 +181,14 @@ def prefix_bench(smoke: bool = False) -> List[Row]:
                         f"cached_tokens={st['cached_tokens_served']}")
         rows.append((f"prefix/{mode}_{n_requests}req", st["wall_s"] * 1e6,
                      derived))
+        xl = st["cross_layer_peak"]
+        rows.append((
+            f"prefix/{mode}_cross_layer", 0.0,
+            f"layers={xl['n_layers']};"
+            f"physical_page_copies={xl['physical_page_copies']};"
+            f"deduped_page_copies={xl['deduped_page_copies']};"
+            f"deduped_bytes={xl['deduped_bytes']}",
+        ))
     rows.append((
         "prefix/reduction", 0.0,
         f"prefill_tokens=-{prefill_reduction:.0%};"

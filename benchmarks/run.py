@@ -11,7 +11,8 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig7sim/*   Fig. 7     cycle-accurate simulator validation
   table9/*    Table IX   curve-fitted (a, b, c) + interpretations
   kernel/*    TPU adaptation: bit-plane GEMV bandwidth amplification,
-              paged-attention gather parity + streamed-bytes accounting
+              paged-attention gather parity + streamed-bytes accounting,
+              length-bucketed dispatch raggedness sweep + serve smoke
   reduction/* collective schedule byte models
   roofline/*  per-cell roofline terms from the dry-run artifacts
   serve/*     continuous-batching throughput, dense vs paged KV cache
@@ -25,6 +26,7 @@ import sys
 
 def main() -> None:
     from .kernel_bench import (
+        bucketed_serve_smoke,
         kernel_bench,
         paged_attention_bench,
         reduction_schedule_bench,
@@ -48,7 +50,8 @@ def main() -> None:
         table1_frequency, fig1_scaling, table4_reduction, table5_utilization,
         fig5_scalability, table8_systems, fig7_gemv,
         fig7_simulator_validation, table9_curvefit, kernel_bench,
-        paged_attention_bench, reduction_schedule_bench, roofline_bench,
+        paged_attention_bench, bucketed_serve_smoke,
+        reduction_schedule_bench, roofline_bench,
         serve_bench, prefix_bench,
     ]
     print("name,us_per_call,derived")

@@ -8,19 +8,31 @@ paged_attention   paged-decode attention: scalar-prefetch block walk,
 paged_prefill     paged-prefill attention (suffix queries, offset causal
                   mask), same native data-movement path
 ops               public jit'd wrappers (impl dispatch + epilogue);
-                  `ops.resolve_impl` is the single strict/silent rule
+                  `ops.resolve_impl` is the single strict/silent rule and
+                  `ops.make_bucket_plan` the length-bucketed dispatch
+                  policy (DESIGN.md §11)
 ref               pure-jnp oracles (the interpret-mode parity anchors)
 """
 
 from .bitplane_gemm import bitplane_gemm
 from .bitplane_gemv import bitplane_gemv
 from .pack import pack_bitplanes
-from .paged_attention import paged_attention, paged_decode_attention
-from .paged_prefill import paged_prefill, paged_prefill_attention
+from .paged_attention import (
+    paged_attention,
+    paged_decode_attention,
+    paged_decode_attention_bucketed,
+)
+from .paged_prefill import (
+    paged_prefill,
+    paged_prefill_attention,
+    paged_prefill_attention_bucketed,
+)
 from . import ops, ref
 
 __all__ = [
     "bitplane_gemm", "bitplane_gemv", "pack_bitplanes",
     "paged_attention", "paged_decode_attention",
-    "paged_prefill", "paged_prefill_attention", "ops", "ref",
+    "paged_decode_attention_bucketed",
+    "paged_prefill", "paged_prefill_attention",
+    "paged_prefill_attention_bucketed", "ops", "ref",
 ]

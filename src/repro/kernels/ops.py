@@ -9,10 +9,11 @@ unsigned-offset correction and the per-channel dequantization scale.
 from __future__ import annotations
 
 import functools
-from typing import Literal, Tuple
+from typing import Literal, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .bitplane_gemm import bitplane_gemm
@@ -20,6 +21,11 @@ from .bitplane_gemv import bitplane_gemv
 from .pack import pack_bitplanes
 
 Impl = Literal["auto", "pallas", "pallas_interpret", "ref"]
+
+#: a bucket plan: ((walk_depth, padded_slot_count), ...) — hashable, so it
+#: can cross a jit boundary as a static argument
+BucketPlan = Tuple[Tuple[int, int], ...]
+BucketStrategy = Literal["none", "pow2"]
 
 #: B threshold below which the GEMV (untiled-B) kernel is used
 _GEMV_MAX_B = 512
@@ -59,6 +65,114 @@ def resolve_impl(impl: str) -> Literal["ref", "interpret", "native"]:
         f"unknown impl {impl!r}; expected one of "
         "'auto', 'pallas', 'pallas_interpret', 'ref'"
     )
+
+
+# ---------------------------------------------------------------------------
+# length-bucketed paged dispatch (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def resolve_bucket_strategy(strategy: str) -> BucketStrategy:
+    """Single home of the bucket-strategy knob shared by the serving
+    layer: `"none"` keeps the PR-3 single-launch walk (every slot folds
+    its full table depth), `"pow2"` groups slots into power-of-two
+    occupancy buckets so the (slot × kv-block) grid never visits a page
+    beyond the bucket bound."""
+    if strategy in ("none", "pow2"):
+        return strategy
+    raise ValueError(
+        f"unknown bucket_strategy {strategy!r}; expected 'none' or 'pow2'"
+    )
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def make_bucket_plan(
+    lengths,
+    block_size: int,
+    table_width: int,
+    strategy: str = "pow2",
+) -> Tuple[Optional[BucketPlan], Optional[np.ndarray]]:
+    """Host-side slot→bucket packing for one paged-kernel dispatch.
+
+    `lengths` are the effective kv lengths each slot's launch must cover
+    (host ints — decode passes `position + 1`, prefill passes `total`).
+    Each slot needs `ceil(len / block_size)` table entries walked; slots
+    are grouped by that need rounded up to a power of two (clipped to
+    `table_width`), and each group's slot count is also padded to a power
+    of two — both roundings exist to bound the recompile set: every
+    launch shape is drawn from the O(log(max_blocks) * log(n_slots))
+    grid of (bound, count) pairs, not from the raggedness of the tick.
+
+    Returns `(plan, perm)`:
+      plan  ((bound, padded_count), ...) sorted by bound — hashable, the
+            static half (jit cache key);
+      perm  int32 [sum(padded_count)] — the dynamic half: slot ids
+            grouped by bucket, padding entries equal to `n_slots` (they
+            gather a dummy scratch row whose output is discarded).
+
+    `(None, None)` means single launch: strategy `"none"`, or a plan
+    whose launches (count padding included) would walk at least as many
+    table entries as the single full-depth launch — bucketing must only
+    ever shrink the streamed bytes, never add launch overhead for equal
+    or more traffic.
+    """
+    if resolve_bucket_strategy(strategy) == "none":
+        return None, None
+    lens = np.asarray(lengths).reshape(-1)
+    n = int(lens.shape[0])
+    if n == 0:
+        return None, None
+    need = -(-np.maximum(lens.astype(np.int64), 1) // block_size)
+    buckets: dict = {}
+    for slot, nd in enumerate(need):
+        bound = min(_next_pow2(int(nd)), table_width)
+        buckets.setdefault(bound, []).append(slot)
+    plan, perm = [], []
+    for bound in sorted(buckets):
+        slots = buckets[bound]
+        count = _next_pow2(len(slots))
+        plan.append((bound, count))
+        perm.extend(slots)
+        perm.extend([n] * (count - len(slots)))
+    if sum(bound * count for bound, count in plan) >= n * table_width:
+        return None, None
+    return tuple(plan), np.asarray(perm, np.int32)
+
+
+def plan_streamed_pages(
+    plan: Optional[BucketPlan], n_slots: int, table_width: int
+) -> int:
+    """Table entries (pages per pool) one dispatch walks: the structural
+    data-movement quantity `benchmarks/kernel_bench.py` sweeps. `None`
+    (single launch) walks every slot's full table."""
+    if plan is None:
+        return n_slots * table_width
+    return sum(bound * count for bound, count in plan)
+
+
+def bucket_args(
+    strategy: str,
+    kernel_impl: str,
+    eff_lengths,
+    block_size: int,
+    table_width: int,
+):
+    """The serving layer's slot→bucket packing for one launch — the one
+    policy `ServeEngine` and `ContinuousBatcher` both apply: `(plan,
+    perm-as-device-array)` from `make_bucket_plan`, or `(None, None)`
+    for the single-launch path when the strategy is `"none"` OR the impl
+    resolves to the oracle (which ignores plans — building them would
+    only retrace the jitted step per plan for zero streamed-byte
+    benefit; `auto` on CPU therefore keeps its single compile)."""
+    if (
+        resolve_bucket_strategy(strategy) == "none"
+        or resolve_impl(kernel_impl) == "ref"
+    ):
+        return None, None
+    plan, perm = make_bucket_plan(eff_lengths, block_size, table_width)
+    return plan, None if perm is None else jnp.asarray(perm)
 
 
 def quantize_and_pack(

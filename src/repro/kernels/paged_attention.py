@@ -46,6 +46,7 @@ from . import ref
 from .ops import resolve_impl
 from .paged_common import (
     NEG_INF,
+    bucketed_page_dispatch,
     double_buffered_page_walk,
     finalize_online_softmax,
     online_softmax_fold,
@@ -73,18 +74,18 @@ def _paged_decode_kernel(
     *,
     n_kv: int,
     block_size: int,
-    max_blocks: int,
+    depth: int,   # walk depth of THIS launch (<= table width)
 ):
     i = pl.program_id(0)               # slot
     j = pl.program_id(1)               # kv block within the slot's table
-    n_steps = pl.num_programs(0) * max_blocks
-    step = i * max_blocks + j
+    n_steps = pl.num_programs(0) * depth
+    step = i * depth + j
     h, hd = q_ref.shape[1], q_ref.shape[2]
     g = h // n_kv
 
     # double-buffered DMA: warm up step 0, prefetch step+1, wait step
     cur = double_buffered_page_walk(
-        step, n_steps, bt_ref, max_blocks, kp_hbm, vp_hbm, k_buf, v_buf, sem
+        step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem
     )
 
     # -- online-softmax fold (identical math to the ref oracle) -----------
@@ -108,12 +109,12 @@ def _paged_decode_kernel(
         m_s, l_s, acc_s, scores, ok[None], vj, "kgs,skh->kgh"
     )
 
-    @pl.when(j == max_blocks - 1)
+    @pl.when(j == depth - 1)
     def _():
         out_ref[0] = finalize_online_softmax(l_s, acc_s).reshape(h, hd)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
 def paged_decode_attention(
     q: jnp.ndarray,            # [B, H, hd]
     k_pages: jnp.ndarray,      # [n_blocks, bs, KV, hd]
@@ -122,22 +123,30 @@ def paged_decode_attention(
     lengths: jnp.ndarray,      # [B] int32
     window: jnp.ndarray,       # scalar / [1] int32
     *,
+    depth: int | None = None,  # walk depth; None = full table width
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Pallas entry point; returns f32 [B, H, hd] attention outputs."""
+    """Pallas entry point; returns f32 [B, H, hd] attention outputs.
+
+    `depth` bounds the block walk: the grid becomes (B, depth) and table
+    columns >= depth are never DMA'd or folded. The bucketed dispatch
+    passes the bucket bound here; every slot in the launch must have
+    `lengths <= depth * bs` or its tail KV is silently skipped."""
     b, h, hd = q.shape
     n_blocks, bs, n_kv, hd2 = k_pages.shape
     assert hd2 == hd, (hd2, hd)
     assert h % n_kv == 0, (h, n_kv)
     mb = block_table.shape[1]
+    depth = mb if depth is None else depth
+    assert 1 <= depth <= mb, (depth, mb)
     g = h // n_kv
     win = jnp.asarray(window, jnp.int32).reshape(1)
     kernel = functools.partial(
-        _paged_decode_kernel, n_kv=n_kv, block_size=bs, max_blocks=mb
+        _paged_decode_kernel, n_kv=n_kv, block_size=bs, depth=depth
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,       # block_table, lengths, window
-        grid=(b, mb),
+        grid=(b, depth),
         in_specs=[
             pl.BlockSpec((1, h, hd), lambda i, j, *_: (i, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
@@ -162,6 +171,34 @@ def paged_decode_attention(
       q, k_pages, v_pages)
 
 
+def paged_decode_attention_bucketed(
+    q: jnp.ndarray,            # [B, H, hd]
+    k_pages: jnp.ndarray,      # [n_blocks, bs, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_blocks] int32
+    lengths: jnp.ndarray,      # [B] int32
+    window: jnp.ndarray,
+    plan,                      # ops.BucketPlan (static)
+    perm,                      # int32 [sum counts] (dynamic)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Bucketed dispatch (DESIGN.md §11): one `paged_decode_attention`
+    launch per occupancy bucket, each bounded at the bucket's walk
+    depth, rows gathered/scattered through the bucket permutation. Bit-
+    identical to the single launch on every slot with length >= 1."""
+
+    def launch(bound, bt_rows, q_rows, len_rows):
+        return paged_decode_attention(
+            q_rows, k_pages, v_pages, bt_rows, len_rows, window,
+            depth=bound, interpret=interpret,
+        )
+
+    return bucketed_page_dispatch(
+        launch, plan, perm, block_table, [q, lengths.astype(jnp.int32)]
+    )
+
+
 def paged_attention(
     q: jnp.ndarray,
     k_pages: jnp.ndarray,
@@ -171,15 +208,27 @@ def paged_attention(
     window: jnp.ndarray,
     *,
     impl: str = "auto",
+    plan=None,
+    perm=None,
 ) -> jnp.ndarray:
     """Impl dispatch, sharing `ops.resolve_impl`: `auto` silently uses the
     jnp oracle on CPU (dry-run lowering) and the native kernel on TPU;
     explicit `pallas` is strict (raises off-TPU); `pallas_interpret`
-    forces the kernel body through the interpreter; `ref` is the oracle."""
+    forces the kernel body through the interpreter; `ref` is the oracle.
+
+    `plan`/`perm` (from `ops.make_bucket_plan`) select the bucketed
+    dispatch on the kernel paths; the oracle is a dense gather with no
+    page walk to bound, so `ref` mode ignores them. `plan=None` is the
+    single-launch path."""
     mode = resolve_impl(impl)
     if mode == "ref":
         return ref.paged_attention_ref(
             q, k_pages, v_pages, block_table, lengths, window
+        )
+    if plan is not None:
+        return paged_decode_attention_bucketed(
+            q, k_pages, v_pages, block_table, lengths, window, plan, perm,
+            interpret=(mode == "interpret"),
         )
     return paged_decode_attention(
         q, k_pages, v_pages, block_table, lengths, window,

@@ -8,7 +8,9 @@ decode is simply the T=1 case of the fold — so both halves live here:
 a fix to the semaphore layout, the prefetch guard, or the softmax
 numerics (NEG_INF sentinel, alpha rescale, max(l, eps) epilogue) lands
 in exactly one place and cannot diverge between the kernels
-(DESIGN.md §10).
+(DESIGN.md §10). The bucketed dispatch scaffold (DESIGN.md §11) lives
+here too: one launch per occupancy bucket, each walking only the bucket
+bound instead of the full table depth.
 """
 
 from __future__ import annotations
@@ -22,10 +24,13 @@ NEG_INF = -1e30
 
 
 def double_buffered_page_walk(
-    step,         # linear grid step: slot * max_blocks + kv_block
-    n_steps,      # total grid steps: n_slots * max_blocks
-    bt_ref,       # [B, max_blocks] int32 block table (scalar prefetch)
-    max_blocks: int,
+    step,         # linear grid step: slot * depth + kv_block
+    n_steps,      # total grid steps: n_slots * depth
+    bt_ref,       # [B, >= depth] int32 block table (scalar prefetch)
+    depth: int,   # per-LAUNCH walk depth — may be narrower than the
+                  # table when a bucketed dispatch bounds the grid
+                  # (DESIGN.md §11); pages at column >= depth are never
+                  # visited
     kp_hbm,       # [n_blocks, bs, KV, hd] K pool — ANY/HBM ref
     vp_hbm,       # V pool
     k_buf,        # [2, bs, KV, hd] VMEM landing buffers
@@ -39,7 +44,7 @@ def double_buffered_page_walk(
     def page_copies(s, slot):
         """The two async page copies (K and V pools) of linear step `s`
         into buffer `slot` — recreated identically to start and to wait."""
-        page = bt_ref[s // max_blocks, s % max_blocks]
+        page = bt_ref[s // depth, s % depth]
         return (
             pltpu.make_async_copy(
                 kp_hbm.at[pl.ds(page, 1)], k_buf.at[pl.ds(slot, 1)],
@@ -96,3 +101,45 @@ def finalize_online_softmax(l_s, acc_s):
     """Normalize the carried state; max(l, eps) keeps fully-masked rows
     finite (matching the oracles' don't-care semantics)."""
     return acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+
+
+def bucketed_page_dispatch(launch, plan, perm, block_table, slot_operands):
+    """Shared gather/launch/scatter scaffold of the bucketed dispatch
+    layer (DESIGN.md §11): one kernel launch per occupancy bucket, each
+    bounded at the bucket's walk depth, so no launch ever visits a table
+    column past what its slots occupy.
+
+    `launch(depth, bt_rows, *operand_rows) -> [count, ...]` runs one
+    bucket; `plan`/`perm` come from `ops.make_bucket_plan`;
+    `slot_operands` are the per-slot arrays (leading axis = slot) to
+    gather alongside the block-table rows. A dummy all-zero row is
+    appended to every gathered array — count-padding entries of `perm`
+    point at it (zero table = scratch page, zero length = fully-masked
+    fold) and their outputs land on the dummy output row, which is
+    dropped. Real slots appear exactly once in `perm`, so the scatter
+    writes every output row exactly once.
+
+    Tail columns a bucket's bound cuts off are fully masked for every
+    valid row, and a fully-masked page folds as an exact no-op (`p`
+    underflows to 0, `alpha` = 1) — so the bucketed output is
+    bit-identical to the single launch on every row with at least one
+    unmasked position. Don't-care rows (length 0 / past `total`) remain
+    don't-care: their garbage depends on how many masked pages fold.
+    """
+    b = block_table.shape[0]
+    bt_ext = jnp.concatenate(
+        [block_table, jnp.zeros_like(block_table[:1])], axis=0
+    )
+    ops_ext = [
+        jnp.concatenate([o, jnp.zeros_like(o[:1])], axis=0)
+        for o in slot_operands
+    ]
+    perm = jnp.asarray(perm, jnp.int32)
+    outs, off = [], 0
+    for bound, count in plan:
+        idx = jax.lax.slice_in_dim(perm, off, off + count)
+        outs.append(launch(bound, bt_ext[idx], *[o[idx] for o in ops_ext]))
+        off += count
+    res = jnp.concatenate(outs, axis=0)
+    out_full = jnp.zeros((b + 1,) + res.shape[1:], res.dtype)
+    return out_full.at[perm].set(res)[:b]

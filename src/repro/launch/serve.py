@@ -58,6 +58,12 @@ def main():
                     choices=["auto", "pallas", "pallas_interpret", "ref"],
                     help="paged-attention kernel path; explicit values are "
                          "strict ('pallas' raises off-TPU)")
+    ap.add_argument("--bucket-strategy", default="pow2",
+                    choices=["pow2", "none"],
+                    help="length-bucketed paged dispatch (DESIGN.md §11): "
+                         "'pow2' bounds each kernel launch at its bucket's "
+                         "page occupancy, 'none' keeps the single "
+                         "full-depth launch")
     args = ap.parse_args()
     if args.prefix and not args.paged:
         ap.error("--prefix requires --paged (the prefix index shares "
@@ -80,6 +86,7 @@ def main():
         prompt_len=None if args.paged else args.prompt_len,
         paged=args.paged, block_size=args.block_size, prefix=args.prefix,
         eos_token=args.eos, kernel_impl=args.kernel_impl,
+        bucket_strategy=args.bucket_strategy,
     )
     key = jax.random.PRNGKey(1)
     shared = jax.random.randint(

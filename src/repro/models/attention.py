@@ -281,6 +281,8 @@ def attention_decode_paged(
     rope_theta: float,
     window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
     impl: str = "auto",
+    bucket_plan=None,
+    bucket_perm=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One-token decode against a block-paged cache (DESIGN.md §8).
 
@@ -291,7 +293,9 @@ def attention_decode_paged(
     mid-run with different prompt lengths coexist in one decode batch.
     `impl` follows `kernels.ops.resolve_impl`: `auto` silently dispatches
     (oracle off-TPU, native scalar-prefetch kernel on TPU); explicit
-    values are strict.
+    values are strict. `bucket_plan`/`bucket_perm` (static/dynamic halves
+    of `kernels.ops.make_bucket_plan` over `positions + 1`) route the
+    kernel through the length-bucketed dispatch (DESIGN.md §11).
     """
     b = x.shape[0]
     bs = k_pages.shape[1]
@@ -305,7 +309,8 @@ def attention_decode_paged(
     capacity = block_table.shape[1] * bs
     win = jnp.asarray(capacity if window is None else window, jnp.int32)
     out = paged_attention(
-        q[:, 0], k_pages, v_pages, block_table, positions + 1, win, impl=impl
+        q[:, 0], k_pages, v_pages, block_table, positions + 1, win,
+        impl=impl, plan=bucket_plan, perm=bucket_perm,
     )                                                        # [B, H, hd] f32
     out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
     return pim_linear(out, params["wo"]), k_pages, v_pages
@@ -326,6 +331,8 @@ def attention_prefill_paged(
     rope_theta: float,
     window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
     impl: str = "auto",
+    bucket_plan=None,
+    bucket_perm=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Suffix prefill against a block-paged cache (DESIGN.md §9).
 
@@ -337,7 +344,11 @@ def attention_prefill_paged(
     garbage KV beyond the slot's length (masked everywhere, overwritten
     by later decode scatters) or into the scratch page when they fall
     past the slot's allocated blocks. `impl` follows
-    `kernels.ops.resolve_impl` (strict explicit values, silent `auto`).
+    `kernels.ops.resolve_impl` (strict explicit values, silent `auto`);
+    `bucket_plan`/`bucket_perm` (over the per-slot totals) route the
+    kernel through the length-bucketed dispatch (DESIGN.md §11) — the
+    scatter always targets the full table, only the read walk is
+    bucket-bounded.
     """
     b, t, _ = x.shape
     bs = k_pages.shape[1]
@@ -359,7 +370,8 @@ def attention_prefill_paged(
     capacity = mb * bs
     win = jnp.asarray(capacity if window is None else window, jnp.int32)
     out = paged_prefill(
-        q, k_pages, v_pages, block_table, start, total, win, impl=impl
+        q, k_pages, v_pages, block_table, start, total, win,
+        impl=impl, plan=bucket_plan, perm=bucket_perm,
     )                                                        # [B, T, H, hd] f32
     out = out.reshape(b, t, n_heads * head_dim).astype(x.dtype)
     return pim_linear(out, params["wo"]), k_pages, v_pages

@@ -608,11 +608,17 @@ def decode_step_paged(
     positions: jnp.ndarray,    # [B] int32 — per-slot index of the new token
     cfg: ModelConfig,
     impl: str = "auto",
+    bucket_plan=None,
+    bucket_perm=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One decode step against the block-paged cache: per-slot positions
     instead of the dense cache's single global write offset, so every slot
     may sit at a different sequence length. `impl` selects the paged
-    attention kernel path (ops.resolve_impl semantics)."""
+    attention kernel path (ops.resolve_impl semantics);
+    `bucket_plan`/`bucket_perm` (static/dynamic, from
+    `kernels.ops.make_bucket_plan` over `positions + 1`) bound every
+    layer's block walk at the per-bucket depth (DESIGN.md §11) — the
+    table is shared across layers, so one plan serves the whole stack."""
     if cfg.block_kind != "attn":
         raise ValueError("decode_step_paged supports attention stacks only")
     dt = compute_dtype(cfg.dtype)
@@ -624,7 +630,9 @@ def decode_step_paged(
         lp, w, kp, vp = xs
         h, kp, vp = attention_decode_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
-            kp, vp, block_table, window=w, impl=impl, **_attn_kwargs(cfg),
+            kp, vp, block_table, window=w, impl=impl,
+            bucket_plan=bucket_plan, bucket_perm=bucket_perm,
+            **_attn_kwargs(cfg),
         )
         xc = xc + h
         hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
@@ -655,6 +663,8 @@ def prefill_paged(
     cfg: ModelConfig,
     last_pos: Optional[jnp.ndarray] = None,
     impl: str = "auto",
+    bucket_plan=None,
+    bucket_perm=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Prefill only the uncached suffix directly into the paged pools
     (DESIGN.md §9): the suffix KV scatters through the block table
@@ -666,6 +676,9 @@ def prefill_paged(
     `last_pos` (dynamic scalar, suffix-relative) selects which suffix
     position's logits to return instead of T-1 — callers right-pad ragged
     suffixes to a block-size bucket and pass the true suffix end.
+    `bucket_plan`/`bucket_perm` (from `kernels.ops.make_bucket_plan` over
+    the per-slot totals) bound every layer's read walk at the per-bucket
+    depth (DESIGN.md §11).
     """
     if cfg.block_kind != "attn":
         raise ValueError("prefill_paged supports attention stacks only")
@@ -678,7 +691,9 @@ def prefill_paged(
         lp, w, kp, vp = xs
         h, kp, vp = attention_prefill_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), start, total,
-            kp, vp, block_table, window=w, impl=impl, **_attn_kwargs(cfg),
+            kp, vp, block_table, window=w, impl=impl,
+            bucket_plan=bucket_plan, bucket_perm=bucket_perm,
+            **_attn_kwargs(cfg),
         )
         xc = xc + h
         hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)

@@ -10,6 +10,14 @@ semantics) and is closed over statically, so one engine can pin the
 native kernel (`"pallas"`, strict — raises off-TPU at trace time), the
 interpreter (`"pallas_interpret"`, the CPU correctness tool) or the
 oracle, while `"auto"` keeps the silent backend dispatch.
+
+Bucketed dispatch (DESIGN.md §11): both factories take the bucket plan
+as a **static** argument (`static_argnames=("plan",)`) and the bucket
+permutation as a dynamic array, so jax's jit cache IS the per-bucket
+compile cache — one compiled executable per distinct plan, and the
+power-of-two rounding in `kernels.ops.make_bucket_plan` bounds how many
+plans can ever exist. `plan=None` (the default) is the single-launch
+path and compiles exactly the PR-3 program.
 """
 
 from __future__ import annotations
@@ -22,20 +30,27 @@ from ..models import decode_step_paged, prefill_paged
 
 def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto"):
     """(params, toks, k_pages, v_pages, block_table, start, total,
-    last_pos) -> (logits, k_pages, v_pages). Retraces once per padded
-    suffix-length bucket (`toks.shape`)."""
-    return jax.jit(
-        lambda p, toks, kp, vp, bt, st, tot, lp: prefill_paged(
-            p, toks, kp, vp, bt, st, tot, cfg, last_pos=lp, impl=impl
+    last_pos[, perm], plan=...) -> (logits, k_pages, v_pages). Retraces
+    once per (padded suffix-length bucket, bucket plan) pair."""
+
+    def fn(p, toks, kp, vp, bt, st, tot, lp, perm=None, plan=None):
+        return prefill_paged(
+            p, toks, kp, vp, bt, st, tot, cfg, last_pos=lp, impl=impl,
+            bucket_plan=plan, bucket_perm=perm,
         )
-    )
+
+    return jax.jit(fn, static_argnames=("plan",))
 
 
 def jit_paged_decode(cfg: ModelConfig, impl: str = "auto"):
-    """(params, token, k_pages, v_pages, block_table, positions) ->
-    (logits, k_pages, v_pages)."""
-    return jax.jit(
-        lambda p, t, kp, vp, bt, pos: decode_step_paged(
-            p, t, kp, vp, bt, pos, cfg, impl=impl
+    """(params, token, k_pages, v_pages, block_table, positions[, perm],
+    plan=...) -> (logits, k_pages, v_pages). Retraces once per bucket
+    plan."""
+
+    def fn(p, t, kp, vp, bt, pos, perm=None, plan=None):
+        return decode_step_paged(
+            p, t, kp, vp, bt, pos, cfg, impl=impl,
+            bucket_plan=plan, bucket_perm=perm,
         )
-    )
+
+    return jax.jit(fn, static_argnames=("plan",))

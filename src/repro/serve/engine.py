@@ -11,6 +11,12 @@ block-paged cache (serve.paged_cache, DESIGN.md §8): decode attention
 gathers pages through a block table with per-slot positions. The dense
 path remains the default fallback.
 
+`ServeConfig.bucket_strategy="pow2"` (the default) routes every paged
+kernel launch through the length-bucketed dispatch (DESIGN.md §11):
+slots are packed into power-of-two page-occupancy buckets per launch so
+the block walk never streams a slot's dead tail pages; `"none"` keeps
+the single full-depth launch.
+
 `ServeConfig.eos_token >= 0` enables early stopping: a sequence that
 emits the EOS token stops decoding (the EOS itself is kept in the
 output), and generation returns as soon as every batch row has stopped —
@@ -31,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..kernels.ops import bucket_args, resolve_bucket_strategy
 from ..models import decode_step, init_cache, prefill
 from ..quant.bitplane import PimQuantConfig, quantize_tree, tree_packed_fraction
 from .compiled import jit_paged_decode, jit_paged_prefill
@@ -46,6 +53,10 @@ class ServeConfig:
     paged: bool = False       # block-paged KV cache (per-slot positions)
     block_size: int = 16      # KV page size in tokens (paged mode)
     kernel_impl: str = "auto"  # paged-attention kernel path (resolve_impl)
+    #: length-bucketed kernel dispatch (DESIGN.md §11): "pow2" bounds
+    #: every paged launch at its bucket's page occupancy; "none" keeps
+    #: the single full-depth launch
+    bucket_strategy: str = "pow2"
 
 
 class ServeEngine:
@@ -62,6 +73,7 @@ class ServeEngine:
         self._prefill_paged = jit_paged_prefill(
             cfg, impl=serve_cfg.kernel_impl
         )
+        resolve_bucket_strategy(serve_cfg.bucket_strategy)
 
     def quantize(self, qcfg: Optional[PimQuantConfig] = None) -> float:
         """Convert projection weights to PIM-resident bit-planes."""
@@ -130,10 +142,11 @@ class ServeEngine:
         pad = -(-t // bs) * bs
         toks = jnp.pad(prompts, ((0, 0), (0, pad - t)))
         zeros = jnp.zeros((b,), jnp.int32)
+        plan, perm = self._bucket_args(pc, np.full((b,), t))
         logits, pc.k_pages, pc.v_pages = self._prefill_paged(
             self.params, toks, pc.k_pages, pc.v_pages,
             pc.device_block_table(), zeros, zeros + t,
-            jnp.asarray(t - 1, jnp.int32),
+            jnp.asarray(t - 1, jnp.int32), perm, plan=plan,
         )
         pc.lengths[:] = t
         out = []
@@ -152,15 +165,25 @@ class ServeEngine:
             for i in range(b):
                 if not done[i]:
                     pc.begin_append(i, int(pc.lengths[i]), 1)
+            plan, perm = self._bucket_args(pc, pc.lengths + 1)
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, tok, pc.k_pages, pc.v_pages,
-                pc.device_block_table(), pc.device_positions(),
+                pc.device_block_table(), pc.device_positions(), perm,
+                plan=plan,
             )
             for i in range(b):
                 if not done[i]:
                     pc.lengths[i] += 1
             tok = self._sample(logits[:, -1], rng)
         return jnp.concatenate(out, axis=-1)
+
+    def _bucket_args(self, pc: PagedKVCache, eff_lengths):
+        """Slot→bucket packing for one launch (DESIGN.md §11): the
+        shared `ops.bucket_args` policy over this call's pool."""
+        return bucket_args(
+            self.sc.bucket_strategy, self.sc.kernel_impl, eff_lengths,
+            pc.block_size, pc.max_blocks_per_slot,
+        )
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.sc.temperature <= 0.0 or rng is None:

@@ -364,3 +364,44 @@ class PagedKVCache:
     def slot_occupancy(self) -> float:
         """Fraction of non-scratch pages currently allocated."""
         return 1.0 - self.n_free / max(self.n_blocks - 1, 1)
+
+    # -- cross-layer accounting (DESIGN.md §9 follow-on, measurement) ------
+
+    def cross_layer_dedup_stats(self) -> Dict[str, int]:
+        """Physical-copy accounting across the per-layer pools.
+
+        Page ids are shared across layers: one logical page occupies one
+        physical page slot in EVERY layer's K and V pool, so a logical
+        page costs `n_layers * 2 * page_bytes` and prefix sharing
+        (refcount > 1) saves that whole column at once. This measures —
+        it does not change — the layout; a layer-major pool that
+        deduplicates per layer independently is the recorded follow-on.
+
+          allocated_pages          logical pages currently allocated
+          shared_pages             logical pages with refcount > 1
+          extra_refs               sum(refcount - 1): logical copies that
+                                   sharing avoided materializing
+          physical_page_copies     per-layer physical copies actually
+                                   stored = n_layers * allocated_pages
+          deduped_page_copies      per-layer copies sharing avoided
+                                   = n_layers * extra_refs
+          page_layer_bytes         bytes of ONE page in ONE layer (K+V)
+          physical_bytes / deduped_bytes   the two above in bytes
+        """
+        n_layers, _, bs, kvh, hd = self.k_pages.shape
+        itemsize = jnp.dtype(self.k_pages.dtype).itemsize
+        page_layer_bytes = 2 * bs * kvh * hd * itemsize   # K + V
+        allocated = len(self._ref)
+        shared = sum(1 for r in self._ref.values() if r > 1)
+        extra = sum(r - 1 for r in self._ref.values())
+        return {
+            "n_layers": int(n_layers),
+            "allocated_pages": allocated,
+            "shared_pages": shared,
+            "extra_refs": extra,
+            "physical_page_copies": n_layers * allocated,
+            "deduped_page_copies": n_layers * extra,
+            "page_layer_bytes": page_layer_bytes,
+            "physical_bytes": n_layers * allocated * page_layer_bytes,
+            "deduped_bytes": n_layers * extra * page_layer_bytes,
+        }

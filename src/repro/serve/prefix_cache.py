@@ -47,12 +47,29 @@ class _Node:
 
 
 class PrefixIndex:
-    """Radix/trie index from full-page token prefixes to physical pages."""
+    """Radix/trie index from full-page token prefixes to physical pages.
 
-    def __init__(self, block_size: int):
+    `max_retained_fraction` caps how much of the pool the index may pin:
+    the index never holds retains on more than that fraction of the
+    usable (non-scratch) pages. `publish` enforces it — once at the cap
+    it evicts an index-only page (oldest leaf) to make room for each new
+    block, and stops publishing when nothing is evictable — so a
+    prefix-heavy trace cannot starve admission of its working pages.
+    The default (1.0) preserves the uncapped behavior."""
+
+    def __init__(self, block_size: int, max_retained_fraction: float = 1.0):
+        if not 0.0 <= max_retained_fraction <= 1.0:
+            raise ValueError(
+                f"max_retained_fraction must be in [0, 1], got "
+                f"{max_retained_fraction}"
+            )
         self.block_size = block_size
+        self.max_retained_fraction = max_retained_fraction
         self.root = _Node(key=None, page=-1, parent=None)
         self._clock = 0
+        #: pages the index currently retains (== node count: one retain
+        #: per node), maintained by publish/evict/drop_all
+        self.retained_pages = 0
         # stats (surfaced by benchmarks/prefix_bench.py). hits/lookups
         # count ADMITTED requests — the scheduler bumps them once per
         # admission, not once per (possibly retried) lookup attempt
@@ -60,6 +77,10 @@ class PrefixIndex:
         self.hits = 0                   # admitted requests with >= 1 page hit
         self.cached_tokens_served = 0   # prompt tokens skipped via hits
         self.evicted_pages = 0
+
+    def page_cap(self, cache: PagedKVCache) -> int:
+        """Max pages the index may retain in `cache`'s pool."""
+        return int(self.max_retained_fraction * (cache.n_blocks - 1))
 
     # -- helpers -----------------------------------------------------------
 
@@ -137,26 +158,42 @@ class PrefixIndex:
         of pages newly published."""
         self._clock += 1
         node, added = self.root, 0
+        path = {self.root}
         owned = cache.owned_blocks(slot)
+        cap = self.page_cap(cache)
         if keys is None:
             keys = self.block_keys(tokens)
         for j, key in enumerate(keys):
             child = node.children.get(key)
             if child is None:
+                # cap enforcement: displace the coldest index-only page.
+                # The nodes already walked this publish are protected —
+                # evicting the chain the new node hangs off would attach
+                # it to a detached parent and leak its retain
+                if self.retained_pages >= cap and not self.evict(
+                    cache, 1, protect=path
+                ):
+                    # at the retained-fraction cap and nothing is
+                    # index-only evictable: stop publishing — the blocks
+                    # already inserted stay (their history is complete)
+                    break
                 child = _Node(key=key, page=int(owned[j]), parent=node)
                 node.children[key] = child
                 cache.retain(child.page)
+                self.retained_pages += 1
                 added += 1
             child.stamp = self._clock
             node = child
+            path.add(node)
         return added
 
     # -- eviction ----------------------------------------------------------
 
-    def _prunable_count(self, cache: PagedKVCache) -> int:
+    def _prunable_count(self, cache: PagedKVCache, protect=frozenset()) -> int:
         """Pages eviction could release right now: nodes whose page is
-        index-only (refcount 1) and whose entire subtree is likewise
-        prunable (a retained descendant pins every ancestor in place)."""
+        index-only (refcount 1), not protected, and whose entire subtree
+        is likewise prunable (a retained or protected descendant pins
+        every ancestor in place)."""
 
         def walk(node: _Node) -> Tuple[int, bool]:
             count, all_ok = 0, True
@@ -166,27 +203,37 @@ class PrefixIndex:
                 all_ok = all_ok and cok
             if node is self.root:
                 return count, all_ok
-            ok = all_ok and cache.refcount(node.page) == 1
+            ok = (
+                all_ok
+                and cache.refcount(node.page) == 1
+                and node not in protect
+            )
             return count + int(ok), ok
 
         return walk(self.root)[0]
 
-    def evict(self, cache: PagedKVCache, n_pages: int) -> int:
+    def evict(
+        self, cache: PagedKVCache, n_pages: int, protect=frozenset()
+    ) -> int:
         """Release `n_pages` index-only pages (refcount 1 — no slot is
         using them), leaf-first and oldest-stamp-first, or NOTHING when
         fewer than `n_pages` are evictable — partially draining the index
         would destroy hot prefixes without unblocking the caller's
         admission. Returns the number of pages released (0 or n_pages).
-        Each trie scan drains every currently-evictable leaf (oldest
-        first) before rescanning — a rescan is only needed when deleting
-        leaves exposes their parents — so the walk is O(depth * index),
-        not O(n_pages * index)."""
-        if self._prunable_count(cache) < n_pages:
+        `protect` nodes are never victims (publish shields the chain it
+        is standing on). Each trie scan drains every currently-evictable
+        leaf (oldest first) before rescanning — a rescan is only needed
+        when deleting leaves exposes their parents — so the walk is
+        O(depth * index), not O(n_pages * index)."""
+        if self._prunable_count(cache, protect) < n_pages:
             return 0
         released = 0
         while released < n_pages:
             victims = sorted(
-                (n for n in self._leaves() if cache.refcount(n.page) == 1),
+                (
+                    n for n in self._leaves()
+                    if cache.refcount(n.page) == 1 and n not in protect
+                ),
                 key=lambda n: n.stamp,
             )
             if not victims:
@@ -198,6 +245,7 @@ class PrefixIndex:
                 cache.release(victim.page)
                 released += 1
         self.evicted_pages += released
+        self.retained_pages -= released
         return released
 
     def _leaves(self) -> List[_Node]:
@@ -218,4 +266,5 @@ class PrefixIndex:
                 cache.release(page)
                 n += 1
         self.root = _Node(key=None, page=-1, parent=None)
+        self.retained_pages = 0
         return n

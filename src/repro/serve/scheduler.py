@@ -39,6 +39,16 @@ free pages) instead of spinning out the tick budget.
 
 `eos_token >= 0` stops a slot early when it emits that token: the EOS
 is kept in the output and the slot's pages recycle the same tick.
+
+Every paged kernel launch goes through the length-bucketed dispatch
+layer (DESIGN.md §11) unless `bucket_strategy="none"`: each tick the
+scheduler packs slots into power-of-two page-occupancy buckets
+(`kernels.ops.make_bucket_plan`) and the compiled step launches one
+kernel per bucket, bounded at the bucket depth — a slot holding 2 pages
+of a 64-page-deep table no longer streams 62 dead tail pages per layer.
+On CPU with `kernel_impl="auto"` the oracle path runs and the plan is
+inert, so tokens are unchanged either way (they are bit-identical on
+the kernel paths too — the cut tail pages fold as exact no-ops).
 """
 
 from __future__ import annotations
@@ -52,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..kernels.ops import bucket_args, resolve_bucket_strategy
 from ..models import decode_step, init_cache, prefill
 from .compiled import jit_paged_decode, jit_paged_prefill
 from .paged_cache import PagedKVCache
@@ -107,6 +118,8 @@ class ContinuousBatcher:
         prefix: bool = False,
         eos_token: int = -1,
         kernel_impl: str = "auto",
+        bucket_strategy: str = "pow2",
+        prefix_max_retained_fraction: float = 1.0,
     ):
         self.cfg = cfg
         self.params = params
@@ -114,6 +127,17 @@ class ContinuousBatcher:
         self.cache_len = cache_len
         self.prompt_len = prompt_len
         self.paged = paged
+        #: length-bucketed kernel dispatch (DESIGN.md §11): "pow2" packs
+        #: slots into power-of-two occupancy buckets each tick so the
+        #: paged kernels never stream a slot's dead tail pages; "none"
+        #: keeps the PR-3 single launch over the full table depth.
+        #: Plans are only built when a kernel path actually runs — the
+        #: oracle ("ref", incl. auto-on-CPU) has no walk to bound, and
+        #: building plans for it would recompile the step per plan for
+        #: zero streamed-byte benefit. "pallas" stays strict lazily: the
+        #: off-TPU raise happens at first launch, not construction.
+        self.bucket_strategy = resolve_bucket_strategy(bucket_strategy)
+        self._kernel_impl = kernel_impl
         #: -1 = never stop early; >= 0 = a slot that emits this token
         #: finishes immediately and frees its pages the same tick
         self.eos_token = eos_token
@@ -127,7 +151,13 @@ class ContinuousBatcher:
         self.prefill_tokens = 0
         if prefix and not paged:
             raise ValueError("prefix sharing requires paged=True")
-        self.prefix = PrefixIndex(block_size) if prefix else None
+        self.prefix = (
+            PrefixIndex(
+                block_size,
+                max_retained_fraction=prefix_max_retained_fraction,
+            )
+            if prefix else None
+        )
         if paged:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
@@ -251,11 +281,15 @@ class ContinuousBatcher:
         # for the full prompt, COW of any shared page the scatter touches
         pc.begin_append(i, n_cached, ns)
         toks = jnp.pad(req.prompt[n_cached:], (0, pad - ns))[None, :]
+        # bucket the one-slot launch by the prompt's page occupancy so
+        # the prefill walk stops at the prompt's bucket bound instead of
+        # streaming the slot's whole max_blocks-deep table
+        plan, perm = self._bucket_args([t])
         logits, pc.k_pages, pc.v_pages = self._prefill_paged(
             self.params, toks, pc.k_pages, pc.v_pages,
             pc.device_block_table()[i: i + 1],
             jnp.asarray([n_cached], jnp.int32), jnp.asarray([t], jnp.int32),
-            jnp.asarray(ns - 1, jnp.int32),
+            jnp.asarray(ns - 1, jnp.int32), perm, plan=plan,
         )
         pc.lengths[i] = t
         self.prefill_tokens += pad
@@ -318,14 +352,25 @@ class ContinuousBatcher:
         self.ticks += 1
         return len(active)
 
+    def _bucket_args(self, eff_lengths):
+        """Slot→bucket packing for one launch (DESIGN.md §11): the
+        shared `ops.bucket_args` policy over this batcher's pool."""
+        return bucket_args(
+            self.bucket_strategy, self._kernel_impl, eff_lengths,
+            self.pcache.block_size, self.pcache.max_blocks_per_slot,
+        )
+
     def _step_paged(self, active: List[int]) -> jnp.ndarray:
         pc = self.pcache
         for i in active:  # page for the incoming token must exist (and be
             # exclusively owned — COW) before the jitted scatter
             pc.begin_append(i, int(pc.lengths[i]), 1)
+        # this decode attends over position + 1 kv rows per slot (idle
+        # slots: 1 scratch row) — bucket the batch by that occupancy
+        plan, perm = self._bucket_args(pc.lengths + 1)
         logits, pc.k_pages, pc.v_pages = self._decode_paged(
             self.params, self.tokens, pc.k_pages, pc.v_pages,
-            pc.device_block_table(), pc.device_positions(),
+            pc.device_block_table(), pc.device_positions(), perm, plan=plan,
         )
         for i in active:
             pc.lengths[i] += 1
@@ -342,12 +387,15 @@ class ContinuousBatcher:
         )
 
     def run_until_drained(
-        self, max_ticks: int = 10_000, strict: bool = True
+        self, max_ticks: int = 10_000, strict: bool = True, on_tick=None
     ) -> Dict[int, List[int]]:
         """Drain the queue. If `max_ticks` is exhausted with work still
         pending, raise RuntimeError (strict=True, default) or warn —
         never silently return partial results; completed requests stay
-        available in `self.finished` either way.
+        available in `self.finished` either way. `on_tick(self)`, if
+        given, runs after every tick — a measurement hook (e.g. sampling
+        pool-sharing stats at their peak) that keeps callers out of the
+        business of re-implementing this drain loop.
 
         A tick that advances zero slots, admits nothing AND frees no
         pages while requests are still queued is a livelock, not slow
@@ -365,6 +413,8 @@ class ContinuousBatcher:
             free_before = self.pcache.n_free if self.paged else 0
             advanced = self.step()
             ticks += 1
+            if on_tick is not None:
+                on_tick(self)
             if (
                 advanced == 0
                 and self.queue

@@ -4,7 +4,13 @@ impl-dispatch rules (ISSUE 3 / DESIGN.md §10).
 
 The kernels fold every block-table page with the oracle's exact masked
 math, so parity must hold for ALL rows — including don't-care outputs
-(length-0 idle slots, padded suffix rows past `total`)."""
+(length-0 idle slots, padded suffix rows past `total`).
+
+Every parity case additionally pins the length-bucketed dispatch
+(DESIGN.md §11) bit-identical to the single launch on valid rows — the
+parity helpers run both, so the whole matrix covers bucketing for free
+(property-based coverage of the packing itself: tests/test_bucketing.py).
+"""
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +18,16 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.paged_attention import paged_attention, paged_decode_attention
-from repro.kernels.paged_prefill import paged_prefill, paged_prefill_attention
+from repro.kernels.paged_attention import (
+    paged_attention,
+    paged_decode_attention,
+    paged_decode_attention_bucketed,
+)
+from repro.kernels.paged_prefill import (
+    paged_prefill,
+    paged_prefill_attention,
+    paged_prefill_attention_bucketed,
+)
 
 TOL = dict(rtol=2e-5, atol=2e-5)
 
@@ -28,6 +42,7 @@ def _assert_decode_parity(q, kp, vp, bt, lengths, window):
     a = ref.paged_attention_ref(q, kp, vp, bt, lengths, window)
     b = paged_decode_attention(q, kp, vp, bt, lengths, window, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+    _assert_bucketed_decode_matches_single(q, kp, vp, bt, lengths, window)
 
 
 def _assert_prefill_parity(q, kp, vp, bt, start, total, window):
@@ -36,6 +51,49 @@ def _assert_prefill_parity(q, kp, vp, bt, start, total, window):
         q, kp, vp, bt, start, total, window, interpret=True
     )
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+    _assert_bucketed_prefill_matches_single(q, kp, vp, bt, start, total,
+                                            window)
+
+
+def _assert_bucketed_decode_matches_single(q, kp, vp, bt, lengths, window):
+    """DESIGN.md §11: the bucketed dispatch is bit-identical to the
+    single launch on every slot with length >= 1 (the cut tail pages
+    fold as exact no-ops); length-0 rows are don't-care either way."""
+    lens = np.asarray(lengths)
+    plan, perm = ops.make_bucket_plan(lens, kp.shape[1], bt.shape[1])
+    if plan is None:  # degenerate plan: single launch IS the dispatch
+        return
+    single = paged_decode_attention(
+        q, kp, vp, bt, lengths, window, interpret=True
+    )
+    bucketed = paged_decode_attention_bucketed(
+        q, kp, vp, bt, lengths, window, plan, perm, interpret=True
+    )
+    valid = lens > 0
+    np.testing.assert_array_equal(
+        np.asarray(single)[valid], np.asarray(bucketed)[valid]
+    )
+
+
+def _assert_bucketed_prefill_matches_single(q, kp, vp, bt, start, total,
+                                            window):
+    """Bucketed prefill (slots grouped by ceil(total / bs)) must match
+    the single launch bit-for-bit on every valid query row
+    (start + t < total); padded rows are don't-care either way."""
+    tot = np.asarray(total)
+    plan, perm = ops.make_bucket_plan(tot, kp.shape[1], bt.shape[1])
+    if plan is None:
+        return
+    single = np.asarray(paged_prefill_attention(
+        q, kp, vp, bt, start, total, window, interpret=True
+    ))
+    bucketed = np.asarray(paged_prefill_attention_bucketed(
+        q, kp, vp, bt, start, total, window, plan, perm, interpret=True
+    ))
+    st_np, t = np.asarray(start), q.shape[1]
+    for i in range(q.shape[0]):
+        tv = max(0, min(t, int(tot[i] - st_np[i])))
+        np.testing.assert_array_equal(single[i, :tv], bucketed[i, :tv])
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +278,75 @@ def test_unknown_impl_raises(decode_args, prefill_args):
         paged_attention(*decode_args, impl="cuda")
     with pytest.raises(ValueError, match="unknown impl"):
         paged_prefill(*prefill_args, impl="")
+
+
+def test_bucketed_plan_threads_through_dispatch(rng):
+    """`paged_attention`/`paged_prefill(plan=...)` route the kernel paths
+    through the bucketed dispatch (matching the oracle on valid rows)
+    while `ref` mode ignores the plan entirely (the oracle has no walk
+    to bound)."""
+    B, T, H, KV, hd, bs, nb, mb = 3, 4, 4, 2, 8, 4, 14, 4
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    qp = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[: B * mb].reshape(B, mb), jnp.int32
+    )
+    lengths = jnp.asarray([5, 2, 9], jnp.int32)
+    win = jnp.asarray(mb * bs, jnp.int32)
+    plan, perm = ops.make_bucket_plan(np.asarray(lengths), bs, mb)
+    assert plan is not None
+    got = paged_attention(
+        q, kp, vp, bt, lengths, win, impl="pallas_interpret",
+        plan=plan, perm=perm,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.paged_attention_ref(q, kp, vp, bt, lengths, win)),
+        **TOL,
+    )
+    # ref ignores even a nonsense plan — no shape error, oracle output
+    np.testing.assert_array_equal(
+        np.asarray(paged_attention(
+            q, kp, vp, bt, lengths, win, impl="ref",
+            plan=((99, 99),), perm=None,
+        )),
+        np.asarray(ref.paged_attention_ref(q, kp, vp, bt, lengths, win)),
+    )
+    start = jnp.asarray([0, 2, 4], jnp.int32)
+    total = jnp.asarray([4, 3, 8], jnp.int32)
+    plan2, perm2 = ops.make_bucket_plan(np.asarray(total), bs, mb)
+    assert plan2 is not None
+    got2 = np.asarray(paged_prefill(
+        qp, kp, vp, bt, start, total, win, impl="pallas_interpret",
+        plan=plan2, perm=perm2,
+    ))
+    want2 = np.asarray(
+        ref.paged_prefill_ref(qp, kp, vp, bt, start, total, win)
+    )
+    st_np, tot_np = np.asarray(start), np.asarray(total)
+    for i in range(B):
+        tv = max(0, min(T, int(tot_np[i] - st_np[i])))
+        np.testing.assert_allclose(got2[i, :tv], want2[i, :tv], **TOL)
+
+
+def test_depth_bounds_the_walk(rng):
+    """An explicit `depth` must reproduce the full walk whenever it
+    covers every valid page — the tail columns it cuts are exact no-ops
+    (this is the exactness the bucketed dispatch rests on)."""
+    B, H, KV, hd, bs, nb, mb = 2, 4, 2, 8, 4, 12, 4
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp, vp = _pools(rng, nb, bs, KV, hd)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, nb))[: B * mb].reshape(B, mb), jnp.int32
+    )
+    lengths = jnp.asarray([7, 5], jnp.int32)       # 2 pages each, mb = 4
+    win = jnp.asarray(mb * bs, jnp.int32)
+    full = paged_decode_attention(q, kp, vp, bt, lengths, win, interpret=True)
+    shallow = paged_decode_attention(
+        q, kp, vp, bt, lengths, win, depth=2, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(shallow))
 
 
 def test_auto_and_interpret_dispatch(decode_args, prefill_args):

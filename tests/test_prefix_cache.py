@@ -132,6 +132,132 @@ def test_index_eviction_respects_refcounts():
     pc.check_invariants({})
 
 
+def test_retained_fraction_cap_bounds_the_index():
+    """`max_retained_fraction` (ISSUE 4 satellite): the index never pins
+    more than that fraction of the usable pool. Once at the cap,
+    publishing a new prefix evicts the coldest index-only page to make
+    room; when nothing is evictable (all retained pages still slot-held)
+    publishing stops instead of overshooting."""
+    cfg = tiny_cfg()
+    # usable pool = 16 pages, cap = 0.25 -> at most 4 index-retained
+    pc = PagedKVCache(cfg, n_slots=4, max_len=16, block_size=4, n_blocks=17)
+    ix = PrefixIndex(block_size=4, max_retained_fraction=0.25)
+    assert ix.page_cap(pc) == 4
+    # churn: publish-and-release three distinct 2-page prefixes — the
+    # third must displace the coldest instead of growing past the cap
+    for i in range(3):
+        pc.alloc_slot(0, 8)
+        ix.publish(np.arange(i * 100, i * 100 + 8), pc, 0)
+        pc.free_slot(0)
+        pc.check_invariants(ix.page_refs())
+    assert ix.retained_pages == len(ix) == 4
+    assert ix.evicted_pages == 2                 # oldest prefix paid
+    # when every retained page is still slot-held nothing is evictable:
+    # a further publish adds nothing rather than overshoot the cap
+    ix.drop_all(pc)
+    pc.check_invariants({})
+    pc.alloc_slot(0, 8)
+    ix.publish(np.arange(8), pc, 0)
+    pc.alloc_slot(1, 8)
+    ix.publish(np.arange(50, 58), pc, 1)
+    assert ix.retained_pages == 4
+    pc.alloc_slot(2, 8)
+    assert ix.publish(np.arange(900, 908), pc, 2) == 0
+    assert ix.retained_pages == 4
+    pc.check_invariants(ix.page_refs())
+    for slot in range(3):
+        pc.free_slot(slot)
+    pc.check_invariants(ix.page_refs())
+    # default preserves the uncapped behavior
+    ix2 = PrefixIndex(block_size=4)
+    assert ix2.max_retained_fraction == 1.0 and ix2.page_cap(pc) == 16
+    with pytest.raises(ValueError, match="max_retained_fraction"):
+        PrefixIndex(block_size=4, max_retained_fraction=1.5)
+
+
+def test_cap_eviction_never_detaches_the_publish_path():
+    """Regression: with the cap at 1 page, publishing [A, B] after [A]
+    was already index-only must NOT evict node A (the chain the new B
+    node hangs off) — that would attach B under a detached parent,
+    leak its retain, and corrupt the trie. The publish path is
+    protected; B is simply not published."""
+    cfg = tiny_cfg()
+    pc = PagedKVCache(cfg, n_slots=2, max_len=16, block_size=4, n_blocks=17)
+    ix = PrefixIndex(block_size=4, max_retained_fraction=1 / 16)
+    assert ix.page_cap(pc) == 1
+    prompt_a = np.arange(4)
+    pc.alloc_slot(0, 4)
+    ix.publish(prompt_a, pc, 0)
+    pc.free_slot(0)                              # node A is index-only now
+    assert ix.retained_pages == len(ix) == 1
+    prompt_ab = np.arange(8)                     # blocks: [A, B]
+    pc.alloc_slot(1, 8)
+    added = ix.publish(prompt_ab, pc, 1)
+    # A (the matched chain) survives; B is not published (cap is full
+    # and the only candidate victim is protected)
+    assert added == 0
+    assert ix.retained_pages == len(ix) == 1
+    assert ix.lookup(prompt_a) != []
+    pc.check_invariants(ix.page_refs())
+    pc.free_slot(1)
+    pc.check_invariants(ix.page_refs())
+    # an unrelated cold prefix IS still displaced at the cap
+    pc.alloc_slot(0, 4)
+    assert ix.publish(np.arange(100, 104), pc, 0) == 1
+    assert ix.retained_pages == len(ix) == 1
+    pc.check_invariants(ix.page_refs())
+    pc.free_slot(0)
+
+
+def test_retained_fraction_cap_threads_through_batcher(model):
+    """Scheduler-level: a capped batcher drains a shared-prefix trace
+    with the index never exceeding its page cap, and the knob defaults
+    to the uncapped PR-2/PR-3 behavior."""
+    cfg, params = model
+    cb = ContinuousBatcher(
+        cfg, params, n_slots=2, cache_len=48, paged=True, block_size=4,
+        prefix=True, prefix_max_retained_fraction=0.2,
+    )
+    cap = cb.prefix.page_cap(cb.pcache)
+    shared = _prompt(0, 12, cfg.vocab_size)
+    for uid in range(5):
+        cb.submit(Request(
+            uid=uid,
+            prompt=jnp.concatenate([shared, _prompt(uid + 1, 6, cfg.vocab_size)]),
+            max_new_tokens=2,
+        ))
+    done = cb.run_until_drained()
+    assert len(done) == 5
+    assert cb.prefix.retained_pages <= cap
+    cb.pcache.check_invariants(cb.prefix.page_refs())
+
+
+def test_cross_layer_dedup_stats_count_shared_columns():
+    """ISSUE 4 satellite (measurement only): a page shared by k holders
+    stores n_layers physical copies once but stands for k logical
+    columns — `extra_refs` * n_layers per-layer copies deduped."""
+    cfg = tiny_cfg()                             # n_layers = 1
+    pc = PagedKVCache(cfg, n_slots=3, max_len=16, block_size=4)
+    s0 = pc.cross_layer_dedup_stats()
+    assert s0["allocated_pages"] == s0["extra_refs"] == 0
+    pc.alloc_slot(0, 8)                          # 2 private pages
+    pc.attach_shared(1, list(pc.owned_blocks(0)))
+    pc.attach_shared(2, list(pc.owned_blocks(0))[:1])
+    s = pc.cross_layer_dedup_stats()
+    assert s["n_layers"] == 1
+    assert s["allocated_pages"] == 2
+    assert s["shared_pages"] == 2                # refcounts 3 and 2
+    assert s["extra_refs"] == 3                  # (3-1) + (2-1)
+    assert s["physical_page_copies"] == 2        # 1 layer x 2 pages
+    assert s["deduped_page_copies"] == 3
+    # bytes: one page in one layer = 2 pools * bs * KV * hd * itemsize
+    assert s["physical_bytes"] == 2 * s["page_layer_bytes"]
+    assert s["deduped_bytes"] == 3 * s["page_layer_bytes"]
+    for slot in range(3):
+        pc.free_slot(slot)
+    assert pc.cross_layer_dedup_stats()["allocated_pages"] == 0
+
+
 # ---------------------------------------------------------------------------
 # refcount / copy-on-write page lifecycle
 # ---------------------------------------------------------------------------
