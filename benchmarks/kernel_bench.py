@@ -226,6 +226,94 @@ def paged_attention_bench() -> List[Row]:
             f"bit_exact={exact}",
         ))
 
+    # -- window-aware bucketing on a mixed global/window stack (§12) ------
+    # The gemma3-27b geometry: 5:1 local(window 1024):global layers. A
+    # length-only plan (DESIGN.md §11) walks a windowed layer's FULL
+    # occupancy even though only the trailing ceil(window/bs) blocks are
+    # live; per-group plans bucket windowed layers by live trailing
+    # pages (their retired head is skipped via the kernels' block_start).
+    # Streamed pages are counted across the whole 62-layer stack for one
+    # decode tick — the data-movement quantity the layer-major refactor
+    # buys on the serving hot path. Asserts a strict stack-level win AND
+    # bit-identical valid rows for the walk-start dispatch at a small
+    # kernel shape.
+    from repro.configs.gemma3_27b import config as gemma3_config
+    from repro.models import layer_attn_groups
+
+    gcfg = gemma3_config()
+    wbs, wmb = 64, 64                       # 4096-token table
+    cap = wbs * wmb
+    groups = layer_attn_groups(gcfg, cap)
+    # near-capacity ragged decode lengths: the long-context steady state
+    wlens = np.asarray([cap, cap - 700, 3000, 2048, cap, 1500, 2600, cap])
+    nslots = wlens.shape[0]
+    length_needs = -(-wlens // wbs)
+    length_plan, _ = ops.make_bucket_plan(wlens, wbs, wmb)
+    streamed_len_only = 0
+    streamed_grouped = 0
+    per_group = {}
+    for window, layers in groups:
+        if window is None:
+            first = np.zeros_like(wlens)
+        else:
+            first = np.maximum(0, (wlens - 1 - window + 1) // wbs)
+        live = np.maximum(length_needs - first, 1)
+        gplan, _ = ops.make_bucket_plan(None, wbs, wmb, needs=live)
+        g_pages = ops.plan_streamed_pages(gplan, nslots, wmb)
+        l_pages = ops.plan_streamed_pages(length_plan, nslots, wmb)
+        streamed_grouped += len(layers) * g_pages
+        streamed_len_only += len(layers) * l_pages
+        per_group[f"window_{window}"] = {
+            "n_layers": len(layers),
+            "live_pages_per_tick": g_pages,
+            "length_only_pages_per_tick": l_pages,
+        }
+    page_b64 = wbs * KV * hd * itemsize
+    win_frac = streamed_grouped / streamed_len_only
+    report["windowed"] = {
+        "config": "gemma3-27b 5:1 local:global, window 1024",
+        "shape": {"slots": nslots, "block_size": wbs, "table_depth": wmb,
+                  "n_layers": gcfg.n_layers},
+        "lengths": [int(x) for x in wlens],
+        "per_group": per_group,
+        "stack_pages_per_tick_length_only": int(streamed_len_only),
+        "stack_pages_per_tick_window_aware": int(streamed_grouped),
+        "kv_bytes_per_tick_length_only": int(2 * streamed_len_only * page_b64),
+        "kv_bytes_per_tick_window_aware": int(2 * streamed_grouped * page_b64),
+        "streamed_fraction": round(win_frac, 3),
+    }
+    # the §12 acceptance: window-aware plans must stream strictly fewer
+    # bytes than the length-only §11 plans on the mixed stack (5/6 of the
+    # layers walk ~window/bs live blocks instead of their full length)
+    assert streamed_grouped < streamed_len_only, report["windowed"]
+    assert win_frac <= 0.5, report["windowed"]
+    # bit-exactness of the walk-start dispatch at a checkable shape: the
+    # bucketed windowed launch (live-need plan + block_start) matches the
+    # full-depth single launch on every valid row
+    sW = 2 * bbs                             # small window: 2 live blocks
+    slens = np.minimum(rng.geometric(0.05, size=bB) + sW, bmb * bbs)
+    sfirst = np.maximum(0, (slens - 1 - sW + 1) // bbs)
+    sbt = np.asarray(rng.integers(1, bnb, size=(bB, bmb)), np.int32)
+    for i in range(bB):
+        sbt[i, : sfirst[i]] = 0              # retired head -> scratch
+    live = np.maximum(-(-slens // bbs) - sfirst, 1)
+    splan, sperm = ops.make_bucket_plan(None, bbs, bmb, needs=live)
+    assert splan is not None
+    sargs = (bq, bkp, bvp, jnp.asarray(sbt), jnp.asarray(slens, jnp.int32),
+             jnp.asarray(sW, jnp.int32))
+    full = np.asarray(paged_decode_attention(*sargs, interpret=True))
+    walked = np.asarray(paged_decode_attention_bucketed(
+        *sargs, splan, sperm, block_start=jnp.asarray(sfirst, jnp.int32),
+        interpret=True,
+    ))
+    assert np.array_equal(full, walked), "windowed walk-start diverged"
+    report["windowed"]["walk_start_bit_exact"] = True
+    rows.append((
+        "kernel/paged_windowed_stack", 0.0,
+        f"stack_pages={streamed_grouped}/{streamed_len_only};"
+        f"fraction={win_frac:.0%};walk_start_bit_exact=True",
+    ))
+
     os.makedirs("results", exist_ok=True)
     with open(os.path.join("results", "paged_kernel_bench.json"), "w") as f:
         json.dump(report, f, indent=1)

@@ -42,7 +42,7 @@ def main() -> None:
         table8_systems,
         table9_curvefit,
     )
-    from .prefix_bench import prefix_bench
+    from .prefix_bench import prefix_bench, windowed_prefix_bench
     from .roofline_bench import roofline_bench
     from .serve_bench import serve_bench
 
@@ -52,7 +52,7 @@ def main() -> None:
         fig7_simulator_validation, table9_curvefit, kernel_bench,
         paged_attention_bench, bucketed_serve_smoke,
         reduction_schedule_bench, roofline_bench,
-        serve_bench, prefix_bench,
+        serve_bench, prefix_bench, windowed_prefix_bench,
     ]
     print("name,us_per_call,derived")
     failures = 0

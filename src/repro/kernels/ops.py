@@ -93,6 +93,7 @@ def make_bucket_plan(
     block_size: int,
     table_width: int,
     strategy: str = "pow2",
+    needs=None,
 ) -> Tuple[Optional[BucketPlan], Optional[np.ndarray]]:
     """Host-side slot→bucket packing for one paged-kernel dispatch.
 
@@ -104,6 +105,13 @@ def make_bucket_plan(
     of two — both roundings exist to bound the recompile set: every
     launch shape is drawn from the O(log(max_blocks) * log(n_slots))
     grid of (bound, count) pairs, not from the raggedness of the tick.
+
+    `needs` overrides the per-slot walk-entry count directly (same
+    shape as `lengths`, which is then ignored): a sliding-window layer's
+    walk covers only its LIVE trailing blocks
+    (`ceil(len/bs) - first_live_block`, the kernels' `block_start`
+    offset skipping the retired head), so windowed layers bucket by live
+    pages, not total length (DESIGN.md §12).
 
     Returns `(plan, perm)`:
       plan  ((bound, padded_count), ...) sorted by bound — hashable, the
@@ -120,11 +128,14 @@ def make_bucket_plan(
     """
     if resolve_bucket_strategy(strategy) == "none":
         return None, None
-    lens = np.asarray(lengths).reshape(-1)
-    n = int(lens.shape[0])
+    if needs is None:
+        lens = np.asarray(lengths).reshape(-1)
+        need = -(-np.maximum(lens.astype(np.int64), 1) // block_size)
+    else:
+        need = np.maximum(np.asarray(needs).reshape(-1).astype(np.int64), 1)
+    n = int(need.shape[0])
     if n == 0:
         return None, None
-    need = -(-np.maximum(lens.astype(np.int64), 1) // block_size)
     buckets: dict = {}
     for slot, nd in enumerate(need):
         bound = min(_next_pow2(int(nd)), table_width)
@@ -173,6 +184,49 @@ def bucket_args(
         return None, None
     plan, perm = make_bucket_plan(eff_lengths, block_size, table_width)
     return plan, None if perm is None else jnp.asarray(perm)
+
+
+def is_bucket_plan(plan) -> bool:
+    """True for a SINGLE BucketPlan `((bound, count), ...)` as opposed to
+    a per-group tuple of plans `(plan_or_None, ...)` — the two shapes the
+    paged model entry points accept for their `bucket_plan` argument."""
+    return (
+        isinstance(plan, tuple)
+        and len(plan) > 0
+        and isinstance(plan[0], tuple)
+        and len(plan[0]) == 2
+        and isinstance(plan[0][0], (int, np.integer))
+    )
+
+
+def bucket_args_grouped(
+    strategy: str,
+    kernel_impl: str,
+    needs_by_group,
+    table_width: int,
+):
+    """Per-group slot→bucket packing for one layer-major launch
+    (DESIGN.md §12): `needs_by_group` is one live-walk-entry array per
+    layer group (global groups pass `ceil(len/bs)`, windowed groups pass
+    live trailing blocks only). Returns `(plans, perms)` — a tuple of
+    per-group plans (static jit half; entries may be None when that
+    group degenerates to the single launch) and the matching tuple of
+    device permutation arrays — or `(None, None)` when no group's plan
+    exists (or the strategy/impl rules out bucketing entirely), which is
+    the everywhere-single-launch path."""
+    if (
+        resolve_bucket_strategy(strategy) == "none"
+        or resolve_impl(kernel_impl) == "ref"
+    ):
+        return None, None
+    plans, perms = [], []
+    for needs in needs_by_group:
+        plan, perm = make_bucket_plan(None, 0, table_width, needs=needs)
+        plans.append(plan)
+        perms.append(None if perm is None else jnp.asarray(perm))
+    if all(p is None for p in plans):
+        return None, None
+    return tuple(plans), tuple(perms)
 
 
 def quantize_and_pack(

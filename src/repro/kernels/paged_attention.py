@@ -48,6 +48,7 @@ from .paged_common import (
     NEG_INF,
     bucketed_page_dispatch,
     double_buffered_page_walk,
+    effective_walk_start,
     finalize_online_softmax,
     online_softmax_fold,
     reset_online_softmax,
@@ -57,6 +58,7 @@ from .paged_common import (
 def _paged_decode_kernel(
     # scalar prefetch (SMEM)
     bt_ref,       # [B, max_blocks] int32
+    st_ref,       # [B] int32 — first live block per slot (walk start)
     len_ref,      # [B] int32
     win_ref,      # [1] int32
     # blocked / ANY operands
@@ -80,12 +82,16 @@ def _paged_decode_kernel(
     j = pl.program_id(1)               # kv block within the slot's table
     n_steps = pl.num_programs(0) * depth
     step = i * depth + j
+    mb = bt_ref.shape[1]
     h, hd = q_ref.shape[1], q_ref.shape[2]
     g = h // n_kv
 
-    # double-buffered DMA: warm up step 0, prefetch step+1, wait step
+    # double-buffered DMA: warm up step 0, prefetch step+1, wait step.
+    # The walk covers table columns [start, start + depth) — a windowed
+    # slot's retired head columns are skipped entirely (DESIGN.md §12)
     cur = double_buffered_page_walk(
-        step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem
+        step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem,
+        start_ref=st_ref,
     )
 
     # -- online-softmax fold (identical math to the ref oracle) -----------
@@ -101,7 +107,8 @@ def _paged_decode_kernel(
     vj = v_buf[cur].astype(jnp.float32)
 
     scores = jnp.einsum("kgh,skh->kgs", qf, kj)          # [KV, g, bs]
-    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+    col = effective_walk_start(st_ref, i, depth, mb) + j
+    kv_pos = col * block_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_size), 1
     )                                                    # [1, bs] (2D: TPU)
     ok = (kv_pos < length) & (kv_pos > q_pos - window)
@@ -123,15 +130,21 @@ def paged_decode_attention(
     lengths: jnp.ndarray,      # [B] int32
     window: jnp.ndarray,       # scalar / [1] int32
     *,
+    block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     depth: int | None = None,  # walk depth; None = full table width
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Pallas entry point; returns f32 [B, H, hd] attention outputs.
 
     `depth` bounds the block walk: the grid becomes (B, depth) and table
-    columns >= depth are never DMA'd or folded. The bucketed dispatch
-    passes the bucket bound here; every slot in the launch must have
-    `lengths <= depth * bs` or its tail KV is silently skipped."""
+    columns outside [start, start + depth) are never DMA'd or folded.
+    The bucketed dispatch passes the bucket bound here; every slot in
+    the launch must hold its LIVE blocks inside that window or its tail
+    KV is silently skipped. `block_start` (default zeros) is the per-slot
+    first live block: a sliding-window layer retires its leading blocks
+    (DESIGN.md §12), and the walk starts past them — retired columns
+    point at scratch and are fully window-masked, so any start <= the
+    true first live block is bit-exact (start 0 = the full walk)."""
     b, h, hd = q.shape
     n_blocks, bs, n_kv, hd2 = k_pages.shape
     assert hd2 == hd, (hd2, hd)
@@ -141,11 +154,13 @@ def paged_decode_attention(
     assert 1 <= depth <= mb, (depth, mb)
     g = h // n_kv
     win = jnp.asarray(window, jnp.int32).reshape(1)
+    if block_start is None:
+        block_start = jnp.zeros((b,), jnp.int32)
     kernel = functools.partial(
         _paged_decode_kernel, n_kv=n_kv, block_size=bs, depth=depth
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,       # block_table, lengths, window
+        num_scalar_prefetch=4,   # block_table, block_start, lengths, window
         grid=(b, depth),
         in_specs=[
             pl.BlockSpec((1, h, hd), lambda i, j, *_: (i, 0, 0)),
@@ -167,8 +182,8 @@ def paged_decode_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), win,
-      q, k_pages, v_pages)
+    )(block_table.astype(jnp.int32), block_start.astype(jnp.int32),
+      lengths.astype(jnp.int32), win, q, k_pages, v_pages)
 
 
 def paged_decode_attention_bucketed(
@@ -181,21 +196,28 @@ def paged_decode_attention_bucketed(
     plan,                      # ops.BucketPlan (static)
     perm,                      # int32 [sum counts] (dynamic)
     *,
+    block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Bucketed dispatch (DESIGN.md §11): one `paged_decode_attention`
     launch per occupancy bucket, each bounded at the bucket's walk
     depth, rows gathered/scattered through the bucket permutation. Bit-
-    identical to the single launch on every slot with length >= 1."""
+    identical to the single launch on every slot with length >= 1.
+    With `block_start` (DESIGN.md §12) the plan may bucket windowed
+    slots by LIVE trailing blocks — each launch walks
+    [start, start + bound) of the gathered rows."""
+    if block_start is None:
+        block_start = jnp.zeros(lengths.shape, jnp.int32)
 
-    def launch(bound, bt_rows, q_rows, len_rows):
+    def launch(bound, bt_rows, q_rows, len_rows, start_rows):
         return paged_decode_attention(
             q_rows, k_pages, v_pages, bt_rows, len_rows, window,
-            depth=bound, interpret=interpret,
+            block_start=start_rows, depth=bound, interpret=interpret,
         )
 
     return bucketed_page_dispatch(
-        launch, plan, perm, block_table, [q, lengths.astype(jnp.int32)]
+        launch, plan, perm, block_table,
+        [q, lengths.astype(jnp.int32), block_start.astype(jnp.int32)],
     )
 
 
@@ -210,6 +232,7 @@ def paged_attention(
     impl: str = "auto",
     plan=None,
     perm=None,
+    block_start=None,
 ) -> jnp.ndarray:
     """Impl dispatch, sharing `ops.resolve_impl`: `auto` silently uses the
     jnp oracle on CPU (dry-run lowering) and the native kernel on TPU;
@@ -218,7 +241,8 @@ def paged_attention(
 
     `plan`/`perm` (from `ops.make_bucket_plan`) select the bucketed
     dispatch on the kernel paths; the oracle is a dense gather with no
-    page walk to bound, so `ref` mode ignores them. `plan=None` is the
+    page walk to bound, so `ref` mode ignores them (and `block_start` —
+    retired columns are window-masked either way). `plan=None` is the
     single-launch path."""
     mode = resolve_impl(impl)
     if mode == "ref":
@@ -228,9 +252,9 @@ def paged_attention(
     if plan is not None:
         return paged_decode_attention_bucketed(
             q, k_pages, v_pages, block_table, lengths, window, plan, perm,
-            interpret=(mode == "interpret"),
+            block_start=block_start, interpret=(mode == "interpret"),
         )
     return paged_decode_attention(
         q, k_pages, v_pages, block_table, lengths, window,
-        interpret=(mode == "interpret"),
+        block_start=block_start, interpret=(mode == "interpret"),
     )

@@ -23,6 +23,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def effective_walk_start(start_ref, slot, depth: int, table_width: int):
+    """First table column a `depth`-bounded walk visits for `slot`.
+
+    `start_ref[slot]` is the slot's first LIVE block (everything before
+    it was retired by the sliding window — those columns point at the
+    scratch page and are fully masked). The walk starts there so a
+    windowed layer's grid covers only live trailing blocks; clamping to
+    `table_width - depth` keeps the window [start, start + depth) inside
+    the table when the launch depth over-covers the slot (the extra
+    leading columns it then re-visits are retired, i.e. masked no-ops —
+    and with `depth == table_width` the start degenerates to 0, which is
+    exactly the pre-layer-major full walk). Returns 0 when no start
+    operand rides the launch."""
+    if start_ref is None:
+        return 0
+    return jnp.maximum(
+        jnp.minimum(start_ref[slot], table_width - depth), 0
+    )
+
+
 def double_buffered_page_walk(
     step,         # linear grid step: slot * depth + kv_block
     n_steps,      # total grid steps: n_slots * depth
@@ -36,15 +56,21 @@ def double_buffered_page_walk(
     k_buf,        # [2, bs, KV, hd] VMEM landing buffers
     v_buf,
     sem,          # DMA semaphores [2 buffers, 2 pools]
+    start_ref=None,  # [B] int32 first live block per slot (scalar
+                     # prefetch) — None keeps the column-0 walk
 ):
     """Run one grid step of the double-buffered block walk: start the
     copies for step+1, wait for this step's pages, and return the buffer
     index now holding them (read `k_buf[cur]` / `v_buf[cur]`)."""
+    table_width = bt_ref.shape[1]
 
     def page_copies(s, slot):
         """The two async page copies (K and V pools) of linear step `s`
         into buffer `slot` — recreated identically to start and to wait."""
-        page = bt_ref[s // depth, s % depth]
+        col = effective_walk_start(
+            start_ref, s // depth, depth, table_width
+        ) + s % depth
+        page = bt_ref[s // depth, col]
         return (
             pltpu.make_async_copy(
                 kp_hbm.at[pl.ds(page, 1)], k_buf.at[pl.ds(slot, 1)],

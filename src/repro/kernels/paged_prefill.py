@@ -58,6 +58,7 @@ from .paged_common import (
     NEG_INF,
     bucketed_page_dispatch,
     double_buffered_page_walk,
+    effective_walk_start,
     finalize_online_softmax,
     online_softmax_fold,
     reset_online_softmax,
@@ -67,6 +68,7 @@ from .paged_common import (
 def _paged_prefill_kernel(
     # scalar prefetch (SMEM)
     bt_ref,       # [B, max_blocks] int32
+    blk_ref,      # [B] int32 — first live block per slot (walk start)
     start_ref,    # [B] int32
     total_ref,    # [B] int32
     win_ref,      # [1] int32
@@ -91,12 +93,16 @@ def _paged_prefill_kernel(
     j = pl.program_id(1)               # kv block within the slot's table
     n_steps = pl.num_programs(0) * depth
     step = i * depth + j
+    mb = bt_ref.shape[1]
     t, h, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
     g = h // n_kv
 
-    # double-buffered DMA: warm up step 0, prefetch step+1, wait step
+    # double-buffered DMA: warm up step 0, prefetch step+1, wait step.
+    # The walk covers table columns [start, start + depth): a windowed
+    # slot's retired head columns are never visited (DESIGN.md §12)
     cur = double_buffered_page_walk(
-        step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem
+        step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem,
+        start_ref=blk_ref,
     )
 
     # -- online-softmax fold (identical math to the ref oracle) -----------
@@ -115,7 +121,8 @@ def _paged_prefill_kernel(
     vj = v_buf[cur].astype(jnp.float32)
 
     scores = jnp.einsum("tkgh,skh->kgts", qf, kj)        # [KV, g, T, bs]
-    kv_pos = j * block_size + jax.lax.broadcasted_iota(
+    col = effective_walk_start(blk_ref, i, depth, mb) + j
+    kv_pos = col * block_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_size), 1
     )                                                    # [1, bs] (2D: TPU)
     ok = (
@@ -143,15 +150,20 @@ def paged_prefill_attention(
     total: jnp.ndarray,        # [B] int32
     window: jnp.ndarray,       # scalar / [1] int32
     *,
+    block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     depth: int | None = None,  # walk depth; None = full table width
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Pallas entry point; returns f32 [B, T, H, hd] attention outputs.
 
     `depth` bounds the block walk: the grid becomes (B, depth) and table
-    columns >= depth are never DMA'd or folded. The bucketed dispatch
-    passes the bucket bound here; every slot in the launch must have
-    `total <= depth * bs` or its tail KV is silently skipped."""
+    columns outside [start, start + depth) are never DMA'd or folded.
+    The bucketed dispatch passes the bucket bound here; every slot in
+    the launch must hold its live blocks inside that window or its tail
+    KV is silently skipped. `block_start` (default zeros) is the first
+    live block per slot (DESIGN.md §12) — retired head columns point at
+    scratch and are window-masked, so any start <= the true first live
+    block is bit-exact."""
     b, t, h, hd = q.shape
     n_blocks, bs, n_kv, hd2 = k_pages.shape
     assert hd2 == hd, (hd2, hd)
@@ -161,11 +173,13 @@ def paged_prefill_attention(
     assert 1 <= depth <= mb, (depth, mb)
     g = h // n_kv
     win = jnp.asarray(window, jnp.int32).reshape(1)
+    if block_start is None:
+        block_start = jnp.zeros((b,), jnp.int32)
     kernel = functools.partial(
         _paged_prefill_kernel, n_kv=n_kv, block_size=bs, depth=depth
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,       # block_table, start, total, window
+        num_scalar_prefetch=5,   # table, block_start, start, total, window
         grid=(b, depth),
         in_specs=[
             pl.BlockSpec((1, t, h, hd), lambda i, j, *_: (i, 0, 0, 0)),
@@ -187,8 +201,9 @@ def paged_prefill_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), jnp.asarray(start, jnp.int32),
-      jnp.asarray(total, jnp.int32), win, q, k_pages, v_pages)
+    )(block_table.astype(jnp.int32), block_start.astype(jnp.int32),
+      jnp.asarray(start, jnp.int32), jnp.asarray(total, jnp.int32), win,
+      q, k_pages, v_pages)
 
 
 def paged_prefill_attention_bucketed(
@@ -202,22 +217,27 @@ def paged_prefill_attention_bucketed(
     plan,                      # ops.BucketPlan (static)
     perm,                      # int32 [sum counts] (dynamic)
     *,
+    block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Bucketed dispatch (DESIGN.md §11): one `paged_prefill_attention`
-    launch per occupancy bucket (slots grouped by ceil(total / bs)),
-    each bounded at the bucket's walk depth. Bit-identical to the single
-    launch on every valid query row (start + t < total)."""
+    launch per occupancy bucket (slots grouped by ceil(total / bs), or
+    by live trailing blocks when `block_start` rides along — DESIGN.md
+    §12), each bounded at the bucket's walk depth. Bit-identical to the
+    single launch on every valid query row (start + t < total)."""
+    if block_start is None:
+        block_start = jnp.zeros(start.shape, jnp.int32)
 
-    def launch(bound, bt_rows, q_rows, start_rows, total_rows):
+    def launch(bound, bt_rows, q_rows, start_rows, total_rows, blk_rows):
         return paged_prefill_attention(
             q_rows, k_pages, v_pages, bt_rows, start_rows, total_rows,
-            window, depth=bound, interpret=interpret,
+            window, block_start=blk_rows, depth=bound, interpret=interpret,
         )
 
     return bucketed_page_dispatch(
         launch, plan, perm, block_table,
-        [q, start.astype(jnp.int32), total.astype(jnp.int32)],
+        [q, start.astype(jnp.int32), total.astype(jnp.int32),
+         block_start.astype(jnp.int32)],
     )
 
 
@@ -233,6 +253,7 @@ def paged_prefill(
     impl: str = "auto",
     plan=None,
     perm=None,
+    block_start=None,
 ) -> jnp.ndarray:
     """Impl dispatch, sharing `ops.resolve_impl`: `auto` silently uses the
     jnp oracle on CPU (dry-run lowering) and the native kernel on TPU;
@@ -241,7 +262,8 @@ def paged_prefill(
 
     `plan`/`perm` (from `ops.make_bucket_plan` over the per-slot totals)
     select the bucketed dispatch on the kernel paths; the oracle is a
-    dense gather with no page walk to bound, so `ref` mode ignores them.
+    dense gather with no page walk to bound, so `ref` mode ignores them
+    (and `block_start` — retired columns are masked either way).
     `plan=None` is the single-launch path."""
     mode = resolve_impl(impl)
     if mode == "ref":
@@ -251,9 +273,10 @@ def paged_prefill(
     if plan is not None:
         return paged_prefill_attention_bucketed(
             q, k_pages, v_pages, block_table, start, total, window,
-            plan, perm, interpret=(mode == "interpret"),
+            plan, perm, block_start=block_start,
+            interpret=(mode == "interpret"),
         )
     return paged_prefill_attention(
         q, k_pages, v_pages, block_table, start, total, window,
-        interpret=(mode == "interpret"),
+        block_start=block_start, interpret=(mode == "interpret"),
     )

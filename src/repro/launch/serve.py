@@ -14,6 +14,12 @@ free list. Without --paged the dense cache requires one shared
 (DESIGN.md §9): every request's prompt opens with a common
 --shared-prefix-len system prompt, whose KV pages are stored and
 prefilled once and mapped refcounted into every later request.
+
+Paged caches are layer-major (DESIGN.md §12): layers sharing an
+attention pattern form a group with its own page pool/tables, and
+sliding-window groups retire pages that fall behind the window
+(--no-window-retirement keeps the lockstep-residency baseline; try
+``--arch gemma3-27b --paged`` for a mixed global/window stack).
 """
 
 from __future__ import annotations
@@ -64,6 +70,10 @@ def main():
                          "'pow2' bounds each kernel launch at its bucket's "
                          "page occupancy, 'none' keeps the single "
                          "full-depth launch")
+    ap.add_argument("--no-window-retirement", action="store_true",
+                    help="disable sliding-window page retirement "
+                         "(DESIGN.md §12) — the lockstep-residency "
+                         "baseline; tokens are identical either way")
     args = ap.parse_args()
     if args.prefix and not args.paged:
         ap.error("--prefix requires --paged (the prefix index shares "
@@ -87,6 +97,7 @@ def main():
         paged=args.paged, block_size=args.block_size, prefix=args.prefix,
         eos_token=args.eos, kernel_impl=args.kernel_impl,
         bucket_strategy=args.bucket_strategy,
+        window_retirement=not args.no_window_retirement,
     )
     key = jax.random.PRNGKey(1)
     shared = jax.random.randint(
@@ -117,7 +128,14 @@ def main():
     if args.paged:
         pc = batcher.pcache
         print(f"  prefill tokens processed: {batcher.prefill_tokens}, "
-              f"pages allocated: {pc.pages_allocated}, COW: {pc.cow_events}")
+              f"pages allocated: {pc.pages_allocated}, COW: {pc.cow_events}, "
+              f"window-retired: {pc.pages_retired}")
+        if len(pc.pools) > 1:  # layer-major groups (DESIGN.md §12)
+            for p in pc.pools:
+                kind = "global" if p.window is None else f"window={p.window}"
+                print(f"  group {p.gid} ({kind}, {len(p.layers)} layers): "
+                      f"{p.pages_allocated} pages drawn, "
+                      f"{p.pages_retired} retired, {p.cow_events} COW")
     if args.prefix:
         ix = batcher.prefix
         print(f"  prefix index: {ix.hits}/{ix.lookups} hits, "

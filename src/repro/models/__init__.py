@@ -8,6 +8,8 @@ from .transformer import (
     init_cache,
     init_lm,
     init_paged_pool,
+    layer_attn_groups,
+    layer_group_index,
     prefill,
     prefill_paged,
 )
@@ -21,7 +23,8 @@ from .encdec import (
 
 __all__ = [
     "count_params", "decode_step", "decode_step_paged", "forward",
-    "init_cache", "init_lm", "init_paged_pool", "prefill", "prefill_paged",
+    "init_cache", "init_lm", "init_paged_pool", "layer_attn_groups",
+    "layer_group_index", "prefill", "prefill_paged",
     "decode_step_encdec", "forward_encdec", "init_encdec",
     "init_encdec_cache", "prefill_encdec",
 ]

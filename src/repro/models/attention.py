@@ -25,6 +25,29 @@ from ..quant.bitplane import pim_linear
 from .common import NEG_INF, Params, apply_rope, dense_init, split_keys
 
 
+def _select_bucket_plan(call, bucket_plans, bucket_perms, plan_class):
+    """Run the paged-attention `call(plan, perm)` under the layer's
+    bucket-plan variant (DESIGN.md §12).
+
+    `bucket_plans`/`bucket_perms` are per-layer-group tuples (the static
+    and dynamic halves of `kernels.ops.bucket_args_grouped`); the scanned
+    layer body selects its group's variant with `plan_class` (a traced
+    per-layer scalar) through `lax.switch` — every variant traces ONCE in
+    the shared scan body, so a mixed global/window stack compiles one
+    kernel dispatch per distinct plan, not per layer. A single-element
+    tuple (or None) skips the switch entirely."""
+    if bucket_plans is None:
+        return call(None, None)
+    if len(bucket_plans) == 1:
+        return call(bucket_plans[0], bucket_perms[0])
+    branches = [
+        (lambda p=p, pm=pm: call(p, pm))
+        for p, pm in zip(bucket_plans, bucket_perms)
+    ]
+    idx = jnp.asarray(0 if plan_class is None else plan_class, jnp.int32)
+    return jax.lax.switch(idx, branches)
+
+
 def init_attention(
     key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
     qkv_bias: bool = False,
@@ -281,8 +304,10 @@ def attention_decode_paged(
     rope_theta: float,
     window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
     impl: str = "auto",
-    bucket_plan=None,
-    bucket_perm=None,
+    block_start: Optional[jnp.ndarray] = None,  # [B] first live block
+    bucket_plans=None,
+    bucket_perms=None,
+    plan_class=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One-token decode against a block-paged cache (DESIGN.md §8).
 
@@ -293,9 +318,12 @@ def attention_decode_paged(
     mid-run with different prompt lengths coexist in one decode batch.
     `impl` follows `kernels.ops.resolve_impl`: `auto` silently dispatches
     (oracle off-TPU, native scalar-prefetch kernel on TPU); explicit
-    values are strict. `bucket_plan`/`bucket_perm` (static/dynamic halves
-    of `kernels.ops.make_bucket_plan` over `positions + 1`) route the
-    kernel through the length-bucketed dispatch (DESIGN.md §11).
+    values are strict.
+
+    Layer-major extras (DESIGN.md §12): `block_table` is THIS layer's
+    table, `block_start` its per-slot first live block (sliding-window
+    retirement), and `bucket_plans`/`bucket_perms`/`plan_class` select
+    the layer group's bucket-plan variant (see `_select_bucket_plan`).
     """
     b = x.shape[0]
     bs = k_pages.shape[1]
@@ -308,10 +336,14 @@ def attention_decode_paged(
     v_pages = v_pages.at[page, offset].set(v[:, 0].astype(v_pages.dtype))
     capacity = block_table.shape[1] * bs
     win = jnp.asarray(capacity if window is None else window, jnp.int32)
-    out = paged_attention(
-        q[:, 0], k_pages, v_pages, block_table, positions + 1, win,
-        impl=impl, plan=bucket_plan, perm=bucket_perm,
-    )                                                        # [B, H, hd] f32
+
+    def call(plan, perm):
+        return paged_attention(
+            q[:, 0], k_pages, v_pages, block_table, positions + 1, win,
+            impl=impl, plan=plan, perm=perm, block_start=block_start,
+        )                                                    # [B, H, hd] f32
+
+    out = _select_bucket_plan(call, bucket_plans, bucket_perms, plan_class)
     out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
     return pim_linear(out, params["wo"]), k_pages, v_pages
 
@@ -331,8 +363,10 @@ def attention_prefill_paged(
     rope_theta: float,
     window: Optional[jnp.ndarray] = None,  # scalar; None = full causal
     impl: str = "auto",
-    bucket_plan=None,
-    bucket_perm=None,
+    block_start: Optional[jnp.ndarray] = None,  # [B] first live block
+    bucket_plans=None,
+    bucket_perms=None,
+    plan_class=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Suffix prefill against a block-paged cache (DESIGN.md §9).
 
@@ -344,11 +378,14 @@ def attention_prefill_paged(
     garbage KV beyond the slot's length (masked everywhere, overwritten
     by later decode scatters) or into the scratch page when they fall
     past the slot's allocated blocks. `impl` follows
-    `kernels.ops.resolve_impl` (strict explicit values, silent `auto`);
-    `bucket_plan`/`bucket_perm` (over the per-slot totals) route the
-    kernel through the length-bucketed dispatch (DESIGN.md §11) — the
-    scatter always targets the full table, only the read walk is
-    bucket-bounded.
+    `kernels.ops.resolve_impl` (strict explicit values, silent `auto`).
+
+    Layer-major extras (DESIGN.md §12): `block_table` is THIS layer's
+    table (a windowed layer's retired/skipped head columns are scratch,
+    masked by the window term), `block_start` the per-slot first live
+    block, and `bucket_plans`/`bucket_perms`/`plan_class` select the
+    layer group's bucket-plan variant — the scatter always targets the
+    full table, only the read walk is bucket-bounded.
     """
     b, t, _ = x.shape
     bs = k_pages.shape[1]
@@ -369,10 +406,14 @@ def attention_prefill_paged(
     v_pages = v_pages.at[page, offset].set(v.astype(v_pages.dtype))
     capacity = mb * bs
     win = jnp.asarray(capacity if window is None else window, jnp.int32)
-    out = paged_prefill(
-        q, k_pages, v_pages, block_table, start, total, win,
-        impl=impl, plan=bucket_plan, perm=bucket_perm,
-    )                                                        # [B, T, H, hd] f32
+
+    def call(plan, perm):
+        return paged_prefill(
+            q, k_pages, v_pages, block_table, start, total, win,
+            impl=impl, plan=plan, perm=perm, block_start=block_start,
+        )                                                    # [B, T, H, hd]
+
+    out = _select_bucket_plan(call, bucket_plans, bucket_perms, plan_class)
     out = out.reshape(b, t, n_heads * head_dim).astype(x.dtype)
     return pim_linear(out, params["wo"]), k_pages, v_pages
 

@@ -28,6 +28,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ModelConfig
 from ..dist.sharding import shard
@@ -581,15 +582,50 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
-# paged decode (DESIGN.md §8)
+# paged decode (DESIGN.md §8, §12)
 # ---------------------------------------------------------------------------
+
+def layer_attn_groups(
+    cfg: ModelConfig, capacity: int
+) -> list:
+    """Partition the layer stack by attention pattern (DESIGN.md §12).
+
+    Returns `[(window, layers), ...]` where `window` is the layer group's
+    sliding window (None = global/full attention — any scheduled window
+    that covers the whole `capacity`) and `layers` the tuple of model
+    layer indices sharing it. This is THE grouping contract of the
+    layer-major paged cache: `serve.paged_cache.PagedKVCache` keeps one
+    physical page pool / free list / block table per group, and the
+    paged model entry points map each scanned layer to its group's table
+    and bucket plan — both sides derive the partition from this one
+    function, so they can never disagree. Global groups sort first, then
+    windowed groups by ascending window (a single-group config — no
+    sliding windows — therefore always has the global pool at group 0,
+    preserving the lockstep-era behavior exactly)."""
+    groups: Dict[Optional[int], list] = {}
+    for l, w in enumerate(cfg.window_schedule(capacity)):
+        key = None if w >= capacity else int(w)
+        groups.setdefault(key, []).append(l)
+    keys = sorted(groups, key=lambda k: (k is not None, k or 0))
+    return [(k, tuple(groups[k])) for k in keys]
+
+
+def layer_group_index(cfg: ModelConfig, capacity: int) -> np.ndarray:
+    """[L] int32: each layer's index into `layer_attn_groups`."""
+    cls = np.zeros((cfg.n_layers,), np.int32)
+    for gid, (_, layers) in enumerate(layer_attn_groups(cfg, capacity)):
+        cls[list(layers)] = gid
+    return cls
+
 
 def init_paged_pool(
     cfg: ModelConfig, n_blocks: int, block_size: int
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-layer KV page pools [L, n_blocks, bs, KV, hd] (bf16 like the
-    dense cache). Page ids are shared across layers: one block-table entry
-    addresses the same page index in every layer's pool."""
+    dense cache). Page-id SPACES are per layer group (DESIGN.md §12):
+    layer l only ever reads pool[l] through its own group's block table,
+    so two groups may hand out the same page index without aliasing —
+    the stacked array is a physical layout, not a shared id space."""
     if cfg.block_kind != "attn":
         raise ValueError(
             f"paged KV cache requires attention layers, got {cfg.block_kind}"
@@ -599,39 +635,84 @@ def init_paged_pool(
     return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
 
 
+def _per_layer_paged_views(cfg, block_table, block_start, bucket_plan,
+                           bucket_perm, capacity):
+    """Normalize the paged entry points' layer-major arguments.
+
+    `block_table` may be one shared [B, mb] table (lockstep-era callers,
+    broadcast to every layer) or the layer-major [L, B, mb] stack;
+    `block_start` likewise [B] / [L, B] (None = zeros). `bucket_plan`
+    may be a single BucketPlan (applied to every layer) or a per-group
+    tuple of plans aligned with `layer_attn_groups`. Returns
+    (bt [L,B,mb], starts [L,B], plans tuple|None, perms tuple|None,
+    cls [L] int32)."""
+    from ..kernels.ops import is_bucket_plan
+
+    l = cfg.n_layers
+    if block_table.ndim == 2:
+        block_table = jnp.broadcast_to(
+            block_table[None], (l,) + block_table.shape
+        )
+    b = block_table.shape[1]
+    if block_start is None:
+        block_start = jnp.zeros((l, b), jnp.int32)
+    elif block_start.ndim == 1:
+        block_start = jnp.broadcast_to(block_start[None], (l, b))
+    if bucket_plan is None:
+        plans, perms = None, None
+    elif is_bucket_plan(bucket_plan):
+        plans, perms = (bucket_plan,), (bucket_perm,)
+    else:
+        plans, perms = tuple(bucket_plan), tuple(bucket_perm)
+    if plans is not None and len(plans) > 1:
+        cls = jnp.asarray(layer_group_index(cfg, capacity))
+    else:
+        cls = jnp.zeros((l,), jnp.int32)
+    return block_table, block_start, plans, perms, cls
+
+
 def decode_step_paged(
     params: Params,
     token: jnp.ndarray,        # [B, 1] int32 — one token per slot
     k_pages: jnp.ndarray,      # [L, n_blocks, bs, KV, hd]
     v_pages: jnp.ndarray,
-    block_table: jnp.ndarray,  # [B, max_blocks] int32 (shared across layers)
+    block_table: jnp.ndarray,  # [L, B, max_blocks] int32 per-layer tables
+                               # (a [B, max_blocks] table broadcasts)
     positions: jnp.ndarray,    # [B] int32 — per-slot index of the new token
     cfg: ModelConfig,
     impl: str = "auto",
     bucket_plan=None,
     bucket_perm=None,
+    block_start=None,          # [L, B] int32 first live block (or [B]/None)
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One decode step against the block-paged cache: per-slot positions
     instead of the dense cache's single global write offset, so every slot
     may sit at a different sequence length. `impl` selects the paged
-    attention kernel path (ops.resolve_impl semantics);
-    `bucket_plan`/`bucket_perm` (static/dynamic, from
-    `kernels.ops.make_bucket_plan` over `positions + 1`) bound every
-    layer's block walk at the per-bucket depth (DESIGN.md §11) — the
-    table is shared across layers, so one plan serves the whole stack."""
+    attention kernel path (ops.resolve_impl semantics).
+
+    Layer-major (DESIGN.md §12): each layer scans with ITS OWN block
+    table and first-live-block vector — a sliding-window layer's table
+    holds only live trailing pages (retired head columns are scratch).
+    `bucket_plan`/`bucket_perm` may be a single plan over `positions + 1`
+    (every layer, the §11 behavior) or per-group tuples from
+    `kernels.ops.bucket_args_grouped` — windowed groups bucketed by live
+    trailing pages; the scanned body selects each layer's variant."""
     if cfg.block_kind != "attn":
         raise ValueError("decode_step_paged supports attention stacks only")
     dt = compute_dtype(cfg.dtype)
     x = params["embed"][token].astype(dt)
-    capacity = block_table.shape[1] * k_pages.shape[2]
+    capacity = block_table.shape[-1] * k_pages.shape[2]
     windows = _window_array(cfg, capacity)
+    block_table, block_start, plans, perms, cls = _per_layer_paged_views(
+        cfg, block_table, block_start, bucket_plan, bucket_perm, capacity
+    )
 
     def body(xc, xs):
-        lp, w, kp, vp = xs
+        lp, w, c, bt, st, kp, vp = xs
         h, kp, vp = attention_decode_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
-            kp, vp, block_table, window=w, impl=impl,
-            bucket_plan=bucket_plan, bucket_perm=bucket_perm,
+            kp, vp, bt, window=w, impl=impl, block_start=st,
+            bucket_plans=plans, bucket_perms=perms, plan_class=c,
             **_attn_kwargs(cfg),
         )
         xc = xc + h
@@ -646,7 +727,9 @@ def decode_step_paged(
         return xc + h2, (kp, vp)
 
     x, (k_pages, v_pages) = jax.lax.scan(
-        body, x, (params["layers"], windows, k_pages, v_pages)
+        body, x,
+        (params["layers"], windows, cls, block_table, block_start,
+         k_pages, v_pages),
     )
     logits = _head(params, x, cfg)
     return logits, k_pages, v_pages
@@ -657,7 +740,8 @@ def prefill_paged(
     tokens: jnp.ndarray,       # [B, T] int32 — uncached suffix (T padded)
     k_pages: jnp.ndarray,      # [L, n_blocks, bs, KV, hd]
     v_pages: jnp.ndarray,
-    block_table: jnp.ndarray,  # [B, max_blocks] int32 (shared across layers)
+    block_table: jnp.ndarray,  # [L, B, max_blocks] int32 per-layer tables
+                               # (a [B, max_blocks] table broadcasts)
     start: jnp.ndarray,        # [B] int32 — cached-prefix length per slot
     total: jnp.ndarray,        # [B] int32 — full valid length per slot
     cfg: ModelConfig,
@@ -665,6 +749,7 @@ def prefill_paged(
     impl: str = "auto",
     bucket_plan=None,
     bucket_perm=None,
+    block_start=None,          # [L, B] int32 first live block (or [B]/None)
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Prefill only the uncached suffix directly into the paged pools
     (DESIGN.md §9): the suffix KV scatters through the block table
@@ -676,23 +761,26 @@ def prefill_paged(
     `last_pos` (dynamic scalar, suffix-relative) selects which suffix
     position's logits to return instead of T-1 — callers right-pad ragged
     suffixes to a block-size bucket and pass the true suffix end.
-    `bucket_plan`/`bucket_perm` (from `kernels.ops.make_bucket_plan` over
-    the per-slot totals) bound every layer's read walk at the per-bucket
-    depth (DESIGN.md §11).
+    Layer-major (DESIGN.md §12): per-layer tables/starts as in
+    `decode_step_paged`; `bucket_plan`/`bucket_perm` accept a single plan
+    over the per-slot totals or per-group tuples.
     """
     if cfg.block_kind != "attn":
         raise ValueError("prefill_paged supports attention stacks only")
     dt = compute_dtype(cfg.dtype)
     x = _embed(params, tokens, cfg, None)
-    capacity = block_table.shape[1] * k_pages.shape[2]
+    capacity = block_table.shape[-1] * k_pages.shape[2]
     windows = _window_array(cfg, capacity)
+    block_table, block_start, plans, perms, cls = _per_layer_paged_views(
+        cfg, block_table, block_start, bucket_plan, bucket_perm, capacity
+    )
 
     def body(xc, xs):
-        lp, w, kp, vp = xs
+        lp, w, c, bt, st, kp, vp = xs
         h, kp, vp = attention_prefill_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), start, total,
-            kp, vp, block_table, window=w, impl=impl,
-            bucket_plan=bucket_plan, bucket_perm=bucket_perm,
+            kp, vp, bt, window=w, impl=impl, block_start=st,
+            bucket_plans=plans, bucket_perms=perms, plan_class=c,
             **_attn_kwargs(cfg),
         )
         xc = xc + h
@@ -707,7 +795,9 @@ def prefill_paged(
         return xc + h2, (kp, vp)
 
     x, (k_pages, v_pages) = jax.lax.scan(
-        body, x, (params["layers"], windows, k_pages, v_pages)
+        body, x,
+        (params["layers"], windows, cls, block_table, block_start,
+         k_pages, v_pages),
     )
     if last_pos is None:
         xe = x[:, -1:]

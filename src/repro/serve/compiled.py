@@ -11,13 +11,15 @@ native kernel (`"pallas"`, strict — raises off-TPU at trace time), the
 interpreter (`"pallas_interpret"`, the CPU correctness tool) or the
 oracle, while `"auto"` keeps the silent backend dispatch.
 
-Bucketed dispatch (DESIGN.md §11): both factories take the bucket plan
-as a **static** argument (`static_argnames=("plan",)`) and the bucket
-permutation as a dynamic array, so jax's jit cache IS the per-bucket
-compile cache — one compiled executable per distinct plan, and the
-power-of-two rounding in `kernels.ops.make_bucket_plan` bounds how many
-plans can ever exist. `plan=None` (the default) is the single-launch
-path and compiles exactly the PR-3 program.
+Layer-major dispatch (DESIGN.md §12): both factories take per-layer
+block tables `[L, B, mb]` and first-live-block vectors `[L, B]`, and the
+bucket PLANS as a **static** per-group tuple
+(`static_argnames=("plans",)`) with the matching permutations as a
+dynamic tuple — jax's jit cache IS the per-plan-combination compile
+cache, and the power-of-two rounding in `kernels.ops.make_bucket_plan`
+bounds how many combinations can ever exist. `plans=None` (the default)
+is the everywhere-single-launch path and compiles exactly the PR-3
+program.
 """
 
 from __future__ import annotations
@@ -29,28 +31,29 @@ from ..models import decode_step_paged, prefill_paged
 
 
 def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto"):
-    """(params, toks, k_pages, v_pages, block_table, start, total,
-    last_pos[, perm], plan=...) -> (logits, k_pages, v_pages). Retraces
-    once per (padded suffix-length bucket, bucket plan) pair."""
+    """(params, toks, k_pages, v_pages, block_tables, block_starts,
+    start, total, last_pos[, perms], plans=...) ->
+    (logits, k_pages, v_pages). Retraces once per (padded suffix-length
+    bucket, plan combination) pair."""
 
-    def fn(p, toks, kp, vp, bt, st, tot, lp, perm=None, plan=None):
+    def fn(p, toks, kp, vp, bt, st, strt, tot, lp, perms=None, plans=None):
         return prefill_paged(
-            p, toks, kp, vp, bt, st, tot, cfg, last_pos=lp, impl=impl,
-            bucket_plan=plan, bucket_perm=perm,
+            p, toks, kp, vp, bt, strt, tot, cfg, last_pos=lp, impl=impl,
+            bucket_plan=plans, bucket_perm=perms, block_start=st,
         )
 
-    return jax.jit(fn, static_argnames=("plan",))
+    return jax.jit(fn, static_argnames=("plans",))
 
 
 def jit_paged_decode(cfg: ModelConfig, impl: str = "auto"):
-    """(params, token, k_pages, v_pages, block_table, positions[, perm],
-    plan=...) -> (logits, k_pages, v_pages). Retraces once per bucket
-    plan."""
+    """(params, token, k_pages, v_pages, block_tables, block_starts,
+    positions[, perms], plans=...) -> (logits, k_pages, v_pages).
+    Retraces once per plan combination."""
 
-    def fn(p, t, kp, vp, bt, pos, perm=None, plan=None):
+    def fn(p, t, kp, vp, bt, st, pos, perms=None, plans=None):
         return decode_step_paged(
             p, t, kp, vp, bt, pos, cfg, impl=impl,
-            bucket_plan=plan, bucket_perm=perm,
+            bucket_plan=plans, bucket_perm=perms, block_start=st,
         )
 
-    return jax.jit(fn, static_argnames=("plan",))
+    return jax.jit(fn, static_argnames=("plans",))

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..kernels.ops import bucket_args, resolve_bucket_strategy
+from ..kernels.ops import bucket_args_grouped, resolve_bucket_strategy
 from ..models import decode_step, init_cache, prefill
 from ..quant.bitplane import PimQuantConfig, quantize_tree, tree_packed_fraction
 from .compiled import jit_paged_decode, jit_paged_prefill
@@ -142,11 +142,12 @@ class ServeEngine:
         pad = -(-t // bs) * bs
         toks = jnp.pad(prompts, ((0, 0), (0, pad - t)))
         zeros = jnp.zeros((b,), jnp.int32)
-        plan, perm = self._bucket_args(pc, np.full((b,), t))
+        plans, perms = self._bucket_args(pc, np.full((b,), t))
         logits, pc.k_pages, pc.v_pages = self._prefill_paged(
             self.params, toks, pc.k_pages, pc.v_pages,
-            pc.device_block_table(), zeros, zeros + t,
-            jnp.asarray(t - 1, jnp.int32), perm, plan=plan,
+            pc.device_block_tables(), pc.device_block_starts(),
+            zeros, zeros + t,
+            jnp.asarray(t - 1, jnp.int32), perms, plans=plans,
         )
         pc.lengths[:] = t
         out = []
@@ -164,12 +165,14 @@ class ServeEngine:
                 break  # the last appended token needs no follow-up decode
             for i in range(b):
                 if not done[i]:
+                    # grows capacity, COWs shared tail pages, and retires
+                    # window-dead blocks per layer group (DESIGN.md §12)
                     pc.begin_append(i, int(pc.lengths[i]), 1)
-            plan, perm = self._bucket_args(pc, pc.lengths + 1)
+            plans, perms = self._bucket_args(pc, pc.lengths + 1)
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, tok, pc.k_pages, pc.v_pages,
-                pc.device_block_table(), pc.device_positions(), perm,
-                plan=plan,
+                pc.device_block_tables(), pc.device_block_starts(),
+                pc.device_positions(), perms, plans=plans,
             )
             for i in range(b):
                 if not done[i]:
@@ -178,11 +181,12 @@ class ServeEngine:
         return jnp.concatenate(out, axis=-1)
 
     def _bucket_args(self, pc: PagedKVCache, eff_lengths):
-        """Slot→bucket packing for one launch (DESIGN.md §11): the
-        shared `ops.bucket_args` policy over this call's pool."""
-        return bucket_args(
-            self.sc.bucket_strategy, self.sc.kernel_impl, eff_lengths,
-            pc.block_size, pc.max_blocks_per_slot,
+        """Per-group slot→bucket packing for one launch (DESIGN.md
+        §11-§12): the shared `ops.bucket_args_grouped` policy over this
+        call's layer-major pools."""
+        return bucket_args_grouped(
+            self.sc.bucket_strategy, self.sc.kernel_impl,
+            pc.bucket_needs(eff_lengths), pc.max_blocks_per_slot,
         )
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:

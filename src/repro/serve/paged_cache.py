@@ -1,25 +1,51 @@
-"""Block-paged KV cache for continuous batching (DESIGN.md §8-§9).
+"""Layer-major block-paged KV cache for continuous batching
+(DESIGN.md §8-§9, §12).
 
 The dense serving cache keeps one global write position, which forces
 every request in a batch to share a padded prompt length and corrupts KV
 placement when a slot is refilled mid-run. `PagedKVCache` removes that
-restriction: KV lives in fixed-size pages of a shared per-layer pool, a
-per-slot block table maps logical position `p` to page
-`block_table[slot, p // block_size]`, and each slot tracks its own
-length. Alloc/free is a host-side free list — refilling a finished slot
-recycles its pages without touching any other slot's KV.
+restriction: KV lives in fixed-size pages, a per-slot block table maps
+logical position `p` to page `block_table[slot, p // block_size]`, and
+each slot tracks its own length. Alloc/free is a host-side free list —
+refilling a finished slot recycles its pages without touching any other
+slot's KV.
+
+**Layer-major layout (DESIGN.md §12).** Layers are partitioned by
+attention pattern (`models.layer_attn_groups` — global layers in one
+group, each distinct sliding window in its own), and every group owns an
+independent page-id space: its own free list, refcounts, per-slot block
+table and first-live-block vector (`LayerPagePool`). The physical KV
+still lives in two stacked `[L, n_blocks, ...]` device arrays, but layer
+l only ever reads pool `l` through its own group's table, so the same
+page index in two groups never aliases. Consequences the lockstep
+(shared-page-id) layout could not deliver:
+
+  * copy-on-write copies exactly ONE group's page (its `Lg` layer rows),
+    not the whole `n_layers`-deep column;
+  * a sliding-window group RETIRES blocks that fall fully behind every
+    remaining query's window — the pages recycle mid-sequence, the table
+    column falls back to scratch (always window-masked), and the kernels
+    skip the retired head via their `block_start` walk offset;
+  * the prefix index retains pages per group, so a windowed layer group
+    never pins a full-length prefix the way a global layer does.
+
+Within a group, layers intentionally stay in lockstep: every KV write
+touches all layers identically and sharing state is uniform across a
+group, so per-layer (rather than per-group) pools would allocate, COW
+and retire the exact same set of pages while multiplying the host
+bookkeeping by the group size. Grouping by attention pattern is the
+no-loss factoring of the layer axis.
 
 Pages are **refcounted** (DESIGN.md §9): a physical page may back the
-same logical prefix of several slots (prefix sharing via
-`serve/prefix_cache.py`) and/or be retained by the prefix index itself.
-A page returns to the LIFO free list only when its refcount reaches
-zero, and any write into a page whose refcount exceeds one first goes
-through copy-on-write (`_make_writable`): the writer gets a private
-copy, the other sharers keep the original bytes.
+same logical prefix of several slots and/or be retained by the prefix
+index. A page returns to the LIFO free list only when its refcount
+reaches zero, and any write into a page whose refcount exceeds one first
+goes through copy-on-write (`_make_writable`).
 
-Page 0 is reserved as a scratch page: inactive slots keep an all-zero
-block table, so the decode step's unconditional KV scatter for idle batch
-rows lands in scratch instead of corrupting live pages.
+Page 0 is reserved as a scratch page in every group: inactive slots and
+retired columns keep an all-zero block table, so unconditional KV
+scatters for idle batch rows land in scratch instead of corrupting live
+pages.
 
 Device state (page pools) stays in jnp arrays and is threaded through the
 jitted decode step; table/length bookkeeping is tiny host-side numpy.
@@ -34,10 +60,242 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..models import init_paged_pool
+from ..models import init_paged_pool, layer_attn_groups
 
 #: the reserved scratch page id (never allocated)
 SCRATCH_PAGE = 0
+
+
+class LayerPagePool:
+    """Host bookkeeping for ONE layer group's page-id space.
+
+    Owns the free list, refcounts, per-slot block table and per-slot
+    first-live-block counter; the physical KV rows live in the parent's
+    stacked pools at `self.layers`. `window` is the group's attention
+    window (None = global); `retire_window` is the window the RETIREMENT
+    machinery uses — None disables retirement (the
+    `window_retirement=False` lockstep-residency baseline) without
+    changing the group partition or the attention math."""
+
+    def __init__(self, gid: int, layers: Sequence[int],
+                 window: Optional[int], n_slots: int, mb: int,
+                 n_blocks: int, block_size: int, retire: bool):
+        self.gid = gid
+        self.layers = tuple(layers)
+        self.window = window
+        self.retire_window = window if retire else None
+        self.block_size = block_size
+        self.max_blocks_per_slot = mb
+        self.n_blocks = n_blocks
+        self.block_table = np.full((n_slots, mb), SCRATCH_PAGE, np.int32)
+        #: leading blocks of each slot that are dead (retired or skipped
+        #: at attach): their columns are scratch, the kernels start the
+        #: walk past them
+        self.first_block = np.zeros((n_slots,), np.int32)
+        self.free_blocks: Deque[int] = collections.deque(
+            range(1, n_blocks)
+        )
+        #: logical-block-aligned page list per slot; None = dead block
+        self._owned: List[List[Optional[int]]] = [
+            [] for _ in range(n_slots)
+        ]
+        #: refcount per allocated (non-free) page
+        self._ref: Dict[int, int] = {}
+        #: admission control: draws promised (reserve) vs made (_drawn)
+        self._reserved: Dict[int, int] = {}
+        self._drawn: Dict[int, int] = collections.defaultdict(int)
+        #: lifetime counters
+        self.pages_allocated = 0
+        self.cow_events = 0
+        self.pages_retired = 0
+
+    # -- small accessors ---------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free_blocks)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def live_pages(self, slot: int) -> int:
+        return sum(1 for p in self._owned[slot] if p is not None)
+
+    def allocated_pages(self) -> int:
+        return len(self._ref)
+
+    def extra_refs(self) -> int:
+        return sum(r - 1 for r in self._ref.values())
+
+    def available_blocks(self) -> int:
+        outstanding = sum(
+            r - self._drawn[s] for s, r in self._reserved.items()
+        )
+        return self.n_free - outstanding
+
+    # -- alloc / free ------------------------------------------------------
+
+    def _pop_free(self, slot: int) -> int:
+        if not self.free_blocks:
+            raise MemoryError(
+                f"paged KV pool exhausted (layer group {self.gid}, "
+                f"window={self.window})"
+            )
+        b = self.free_blocks.popleft()
+        self._ref[b] = 1
+        self._drawn[slot] += 1
+        self.pages_allocated += 1
+        return b
+
+    def retain(self, page: int) -> None:
+        assert page in self._ref, (self.gid, page)
+        self._ref[page] += 1
+
+    def release(self, page: int) -> None:
+        """Drop one reference; recycle at zero (LIFO — just-released
+        pages are the likeliest to still be resident in a cache tier)."""
+        r = self._ref[page] - 1
+        if r:
+            self._ref[page] = r
+        else:
+            del self._ref[page]
+            self.free_blocks.appendleft(page)
+
+    def dead_blocks(self, q_min: int) -> int:
+        """Blocks fully behind every remaining query's window: block j is
+        dead iff its last position satisfies
+        `(j+1)*bs - 1 <= q_min - window` — queries only move right, so
+        dead stays dead."""
+        if self.retire_window is None:
+            return 0
+        return max(0, (q_min - self.retire_window + 1) // self.block_size)
+
+    def retire(self, slot: int, q_min: int) -> int:
+        """Window-aware page retirement (DESIGN.md §12): release every
+        live block that fell fully behind the window of the earliest
+        remaining query (`q_min`); the column falls back to scratch and
+        the walk start advances past it. Returns pages released."""
+        owned = self._owned[slot]
+        target = min(self.dead_blocks(q_min), len(owned))
+        released = 0
+        for j in range(int(self.first_block[slot]), target):
+            page = owned[j]
+            if page is not None:
+                self.release(page)
+                owned[j] = None
+                self.block_table[slot, j] = SCRATCH_PAGE
+                self.pages_retired += 1
+                released += 1
+        if target > self.first_block[slot]:
+            self.first_block[slot] = target
+        return released
+
+    def grow(self, slot: int, q_min: int, n_tokens: int) -> None:
+        """Extend the slot's block list to cover `n_tokens` positions.
+        Blocks already dead for `q_min` (possible only below the write
+        window) are marked dead at birth — no pool draw, no table entry."""
+        need = -(-n_tokens // self.block_size)
+        if need > self.max_blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed max "
+                f"{self.max_blocks_per_slot * self.block_size}"
+            )
+        owned = self._owned[slot]
+        dead = self.dead_blocks(q_min)
+        while len(owned) < need:
+            j = len(owned)
+            if j < dead:
+                owned.append(None)
+                self.first_block[slot] = max(
+                    int(self.first_block[slot]), j + 1
+                )
+            else:
+                b = self._pop_free(slot)
+                self.block_table[slot, j] = b
+                owned.append(b)
+
+    def attach(self, slot: int, j0: int, pages: Sequence[int]) -> None:
+        """Map shared pages as blocks [j0, j0 + len(pages)) of the slot's
+        table (a prefix hit); blocks below j0 are dead (window-skipped)."""
+        assert not self._owned[slot], (self.gid, slot)
+        if not pages:
+            return
+        owned: List[Optional[int]] = [None] * j0
+        for i, p in enumerate(pages):
+            assert p != SCRATCH_PAGE and p in self._ref, (self.gid, p)
+            self._ref[p] += 1
+            self.block_table[slot, j0 + i] = p
+            owned.append(p)
+        self._owned[slot] = owned
+        self.first_block[slot] = j0
+
+    def free_slot(self, slot: int) -> None:
+        for p in self._owned[slot]:
+            if p is not None:
+                self.release(p)
+        self._owned[slot] = []
+        self._reserved.pop(slot, None)
+        self._drawn.pop(slot, None)
+        self.block_table[slot, :] = SCRATCH_PAGE
+        self.first_block[slot] = 0
+
+    def make_writable(self, cache: "PagedKVCache", slot: int,
+                      block_idx: int) -> None:
+        """Copy-on-write for THIS group only: the page copy touches the
+        group's layer rows of the parent pools — other layer groups'
+        pages are never read or written (DESIGN.md §12)."""
+        old = self._owned[slot][block_idx]
+        assert old is not None, (self.gid, slot, block_idx)
+        if self._ref[old] <= 1:
+            return
+        new = self._pop_free(slot)
+        lg = jnp.asarray(self.layers)
+        cache.k_pages = cache.k_pages.at[lg, new].set(
+            cache.k_pages[lg, old]
+        )
+        cache.v_pages = cache.v_pages.at[lg, new].set(
+            cache.v_pages[lg, old]
+        )
+        self._ref[old] -= 1
+        self._owned[slot][block_idx] = new
+        self.block_table[slot, block_idx] = new
+        self.cow_events += 1
+
+    def check_invariants(self, lengths: np.ndarray,
+                         external: Optional[Dict[int, int]]) -> None:
+        slot_holds: Dict[int, int] = collections.defaultdict(int)
+        for slot, blocks in enumerate(self._owned):
+            n = int(lengths[slot])
+            assert len(blocks) * self.block_size >= n, \
+                (self.gid, slot, blocks, n)
+            first = int(self.first_block[slot])
+            for j, b in enumerate(blocks):
+                if b is None:
+                    assert j < first, (self.gid, slot, j, first)
+                    assert self.block_table[slot, j] == SCRATCH_PAGE
+                    continue
+                assert b != SCRATCH_PAGE, (self.gid, slot, j)
+                assert int(self.block_table[slot, j]) == b, \
+                    (self.gid, slot, j)
+                slot_holds[b] += 1
+        allocated = set(self._ref)
+        free = set(self.free_blocks)
+        assert len(free) == len(self.free_blocks), \
+            f"group {self.gid}: duplicate free pages"
+        assert not (allocated & free), (self.gid, allocated & free)
+        assert allocated | free == set(range(1, self.n_blocks)), \
+            f"group {self.gid}: leaked pages"
+        for p, r in self._ref.items():
+            assert r >= 1, (self.gid, p, r)
+            held = slot_holds.get(p, 0)
+            assert r >= held, (self.gid, p, r, held)
+            if external is not None:
+                assert r == held + external.get(p, 0), \
+                    (self.gid, p, r, held)
+        for p in slot_holds:
+            assert p in self._ref, (self.gid, p)
+        assert self.available_blocks() >= 0, \
+            f"group {self.gid}: over-committed reservations"
 
 
 class PagedKVCache:
@@ -48,10 +306,16 @@ class PagedKVCache:
         max_len: int,
         block_size: int = 16,
         n_blocks: int = 0,
+        window_retirement: bool = True,
     ):
         """`max_len`: max tokens (prompt + generated) any slot may hold.
-        `n_blocks=0` sizes the pool for full occupancy: scratch + every
-        slot at max_len."""
+        `n_blocks=0` sizes each group's pool for full occupancy: scratch
+        + every slot at max_len. `window_retirement=False` keeps the
+        layer-major structure but disables sliding-window page
+        retirement and window-aware attach skipping — the
+        lockstep-residency baseline the benchmarks compare against
+        (tokens are bit-identical either way: retired columns are
+        window-masked)."""
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if max_len < 1:
@@ -66,227 +330,287 @@ class PagedKVCache:
                 f"n_blocks={self.n_blocks} cannot hold even one slot "
                 f"({self.max_blocks_per_slot} blocks + scratch)"
             )
+        self.window_retirement = window_retirement
+        capacity = self.max_blocks_per_slot * block_size
+        self.pools = [
+            LayerPagePool(
+                gid, layers, window, n_slots, self.max_blocks_per_slot,
+                self.n_blocks, block_size, retire=window_retirement,
+            )
+            for gid, (window, layers) in enumerate(
+                layer_attn_groups(cfg, capacity)
+            )
+        ]
         self.k_pages, self.v_pages = init_paged_pool(
             cfg, self.n_blocks, block_size
         )
-        self.block_table = np.full(
-            (n_slots, self.max_blocks_per_slot), SCRATCH_PAGE, np.int32
-        )
         self.lengths = np.zeros((n_slots,), np.int32)
-        self.free_blocks: Deque[int] = collections.deque(
-            range(1, self.n_blocks)
-        )
-        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
-        #: refcount per allocated (non-free) page: number of slots whose
-        #: block table lists it + external retains (prefix index)
-        self._ref: Dict[int, int] = {}
-        #: admission control: pool draws promised to active slots
-        #: (reserve_slot) vs pool draws actually made (_drawn) — so
-        #: ensure_capacity / COW can never exhaust the pool mid-run
-        self._reserved: Dict[int, int] = {}
-        self._drawn: Dict[int, int] = collections.defaultdict(int)
-        #: lifetime counters (benchmarks): pages popped from the free
-        #: list, and copy-on-write events
-        self.pages_allocated = 0
-        self.cow_events = 0
 
-    # -- invariant helpers -------------------------------------------------
+    # -- group-0 conveniences (single-group configs == the old API) --------
 
     @property
     def n_free(self) -> int:
-        return len(self.free_blocks)
+        """Free blocks in the most-pressured group (the admission
+        bottleneck); equals the old single-pool count when the config
+        has one attention pattern."""
+        return min(p.n_free for p in self.pools)
 
-    def owned_blocks(self, slot: int) -> Tuple[int, ...]:
-        return tuple(self._owned[slot])
+    @property
+    def free_blocks(self) -> Deque[int]:
+        return self.pools[0].free_blocks
 
-    def refcount(self, page: int) -> int:
-        return self._ref.get(page, 0)
+    @property
+    def _ref(self) -> Dict[int, int]:
+        return self.pools[0]._ref
 
-    def is_shared(self, page: int) -> bool:
-        return self._ref.get(page, 0) > 1
+    @property
+    def block_table(self) -> np.ndarray:
+        return self.pools[0].block_table
 
-    def check_invariants(
-        self, external_refs: Optional[Dict[int, int]] = None
-    ) -> None:
-        """Every non-scratch page is free XOR refcounted, and each page's
-        refcount equals the number of slots listing it plus its external
-        (prefix-index) retains. Pass `external_refs` (page -> count, e.g.
-        `PrefixIndex.page_refs()`) to pin the split exactly; without it
-        the external part is only checked to be non-negative."""
-        slot_holds: Dict[int, int] = collections.defaultdict(int)
-        for slot, blocks in enumerate(self._owned):
-            n = int(self.lengths[slot])
-            assert len(blocks) * self.block_size >= n, (slot, blocks, n)
-            for j, b in enumerate(blocks):
-                assert b != SCRATCH_PAGE, (slot, j)
-                assert int(self.block_table[slot, j]) == b, (slot, j)
-                slot_holds[b] += 1
-        allocated = set(self._ref)
-        free = set(self.free_blocks)
-        assert len(free) == len(self.free_blocks), "duplicate free pages"
-        assert not (allocated & free), allocated & free
-        assert allocated | free == set(range(1, self.n_blocks)), "leaked pages"
-        for p, r in self._ref.items():
-            assert r >= 1, (p, r)
-            held = slot_holds.get(p, 0)
-            assert r >= held, (p, r, held)
-            if external_refs is not None:
-                assert r == held + external_refs.get(p, 0), (p, r, held)
-        for p, held in slot_holds.items():
-            assert p in self._ref, p
-        assert self.available_blocks() >= 0, "over-committed reservations"
+    @property
+    def pages_allocated(self) -> int:
+        return sum(p.pages_allocated for p in self.pools)
 
-    # -- alloc / free ------------------------------------------------------
+    @property
+    def cow_events(self) -> int:
+        return sum(p.cow_events for p in self.pools)
+
+    @property
+    def pages_retired(self) -> int:
+        return sum(p.pages_retired for p in self.pools)
+
+    def owned_blocks(self, slot: int, group: int = 0) -> Tuple:
+        """The group's logical-block-aligned page list (None = dead)."""
+        return tuple(self.pools[group]._owned[slot])
+
+    def refcount(self, page: int, group: int = 0) -> int:
+        return self.pools[group].refcount(page)
+
+    def is_shared(self, page: int, group: int = 0) -> bool:
+        return self.pools[group].refcount(page) > 1
+
+    def retain(self, page: int, group: int = 0) -> None:
+        self.pools[group].retain(page)
+
+    def release(self, page: int, group: int = 0) -> None:
+        self.pools[group].release(page)
+
+    # -- invariants --------------------------------------------------------
+
+    def check_invariants(self, external_refs=None) -> None:
+        """Every group's pages are free XOR refcounted and each refcount
+        equals slot holds + external (prefix-index) retains.
+        `external_refs` is `PrefixIndex.page_refs()` — per-group
+        `{gid: {page: count}}` — or a flat `{page: count}` dict, which
+        addresses group 0 (the single-group configs of the older
+        tests)."""
+        per_group: Optional[Dict[int, Dict[int, int]]]
+        if external_refs is None:
+            per_group = None
+        elif all(isinstance(v, dict) for v in external_refs.values()):
+            per_group = dict(external_refs)
+        else:
+            per_group = {0: external_refs}
+        for pool in self.pools:
+            ext = None if per_group is None else per_group.get(
+                pool.gid, {}
+            )
+            pool.check_invariants(self.lengths, ext)
+
+    # -- admission control -------------------------------------------------
 
     def _blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
     def available_blocks(self) -> int:
-        """Free blocks not promised to an active slot's reservation."""
-        outstanding = sum(
-            r - self._drawn[s] for s, r in self._reserved.items()
-        )
-        return self.n_free - outstanding
+        """Unpromised free blocks in the most-pressured group."""
+        return min(p.available_blocks() for p in self.pools)
 
     def can_fit(self, n_tokens: int) -> bool:
-        return self.available_blocks() >= self._blocks_for(n_tokens)
+        need = self._blocks_for(n_tokens)
+        return all(p.available_blocks() >= need for p in self.pools)
 
     def draws_for(self, n_tokens: int, n_shared: int = 0,
                   n_cow: int = 0) -> int:
-        """Pool draws a slot needs for `n_tokens` positions when its
-        first `n_shared` pages arrive via attach_shared and up to `n_cow`
-        of them may be copy-on-written — the single home of the
-        admission draw formula (reserve_slot and the scheduler's
-        eviction-deficit computation both use it)."""
+        """Pool draws a slot needs in ONE group for `n_tokens` positions
+        when `n_shared` of its blocks arrive dead-or-attached and up to
+        `n_cow` attached pages may be copy-on-written — the single home
+        of the admission draw formula. (Dead window-skipped blocks cost
+        no draw, exactly like attached ones, so callers fold both into
+        `n_shared`.)"""
         return self._blocks_for(n_tokens) - n_shared + n_cow
 
-    def _pop_free(self, slot: int) -> int:
-        if not self.free_blocks:
-            raise MemoryError("paged KV pool exhausted")
-        b = self.free_blocks.popleft()
-        self._ref[b] = 1
-        self._drawn[slot] += 1
-        self.pages_allocated += 1
-        return b
+    def _group_counts(self, value) -> Dict[int, int]:
+        if isinstance(value, dict):
+            return {p.gid: value.get(p.gid, 0) for p in self.pools}
+        return {p.gid: int(value) for p in self.pools}
 
-    def retain(self, page: int) -> None:
-        """Add an external reference (prefix index) to an allocated page."""
-        assert page in self._ref, f"retain of unallocated page {page}"
-        self._ref[page] += 1
-
-    def release(self, page: int) -> None:
-        """Drop one reference; recycle the page at refcount zero (LIFO, so
-        just-released pages are reused first — they are the likeliest to
-        still be resident in any cache tier)."""
-        r = self._ref[page] - 1
-        if r:
-            self._ref[page] = r
-        else:
-            del self._ref[page]
-            self.free_blocks.appendleft(page)
-
-    def reserve_slot(
-        self, slot: int, n_tokens: int, n_shared: int = 0, n_cow: int = 0
-    ) -> bool:
-        """Admission control: promise `slot` enough pool draws for
-        `n_tokens` total positions (prompt + all future decode tokens),
-        of which the first `n_shared` pages arrive via `attach_shared`
-        (no pool draw) and up to `n_cow` shared pages may need a
-        copy-on-write draw. Returns False when the pool cannot honor the
-        promise right now; after True, growth up to `n_tokens` (including
-        COW) is guaranteed not to exhaust the pool."""
+    def reserve_slot(self, slot: int, n_tokens: int, n_shared=0,
+                     n_cow=0) -> bool:
+        """Admission control: promise `slot` enough pool draws in EVERY
+        layer group for `n_tokens` total positions. `n_shared`/`n_cow`
+        are ints (same in every group) or per-group dicts (a prefix hit
+        attaches different page counts per group — window-skipped blocks
+        count as shared). All-or-nothing: either every group can honor
+        its promise or nothing is reserved."""
         need = self._blocks_for(n_tokens)
         if need > self.max_blocks_per_slot:
             raise ValueError(
                 f"slot {slot}: {n_tokens} tokens exceed max "
                 f"{self.max_blocks_per_slot * self.block_size}"
             )
-        draws = self.draws_for(n_tokens, n_shared, n_cow)
-        if self.available_blocks() < draws:
+        shared = self._group_counts(n_shared)
+        cow = self._group_counts(n_cow)
+        draws = {
+            p.gid: self.draws_for(n_tokens, shared[p.gid], cow[p.gid])
+            for p in self.pools
+        }
+        if any(
+            p.available_blocks() < draws[p.gid] for p in self.pools
+        ):
             return False
-        self._reserved[slot] = draws
-        self._drawn[slot] = 0
+        for p in self.pools:
+            p._reserved[slot] = draws[p.gid]
+            p._drawn[slot] = 0
         return True
+
+    def reserve_deficits(self, n_tokens: int, n_shared=0,
+                         n_cow=0) -> Dict[int, int]:
+        """Per-group draw deficits (> 0 only) a failed reservation faces
+        right now — what eviction must free, group by group."""
+        shared = self._group_counts(n_shared)
+        cow = self._group_counts(n_cow)
+        out = {}
+        for p in self.pools:
+            d = self.draws_for(n_tokens, shared[p.gid], cow[p.gid])
+            short = d - p.available_blocks()
+            if short > 0:
+                out[p.gid] = short
+        return out
+
+    # -- slot lifecycle ----------------------------------------------------
 
     def alloc_slot(self, slot: int, n_tokens: int) -> None:
         """Reserve pages so `slot` can hold `n_tokens`; starts the slot
         empty (length 0 — the caller writes KV then sets the length)."""
-        assert not self._owned[slot], f"slot {slot} already allocated"
+        for p in self.pools:
+            assert not p._owned[slot], f"slot {slot} already allocated"
         self.ensure_capacity(slot, n_tokens)
 
+    def ensure_capacity(self, slot: int, n_tokens: int) -> None:
+        """Grow every group's block list to cover `n_tokens` positions
+        (earliest query = the slot's current length, so no block is
+        skipped for a fresh slot)."""
+        q_min = int(self.lengths[slot])
+        for p in self.pools:
+            p.grow(slot, q_min, n_tokens)
+
+    def plan_attach(self, block_pages: List[Dict[int, int]],
+                    n_cached: int) -> Optional[Dict[int, Tuple[int, List[int]]]]:
+        """Window-aware per-group attach plan for a prefix hit
+        (DESIGN.md §12). `block_pages[j]` maps gid -> physical page of
+        the hit chain's j-th block (missing when that group never owned
+        the block — the publisher window-skipped it). For each group the
+        plan attaches only blocks a suffix query (earliest position
+        `n_cached`) can still see; fully-dead leading blocks are skipped
+        — the group neither bumps their refcounts nor lists them.
+        Returns None when some group is MISSING a block it still needs
+        (shrinking the hit only widens the window's reach, so the hit is
+        rejected outright)."""
+        nbh = len(block_pages)
+        out: Dict[int, Tuple[int, List[int]]] = {}
+        for p in self.pools:
+            j0 = min(p.dead_blocks(n_cached), nbh)
+            pages = []
+            for j in range(j0, nbh):
+                page = block_pages[j].get(p.gid)
+                if page is None:
+                    return None
+                pages.append(page)
+            out[p.gid] = (j0, pages)
+        return out
+
+    def attach_plan_counts(
+        self, plan: Dict[int, Tuple[int, List[int]]], needs_cow: bool
+    ) -> Tuple[Dict[int, int], Dict[int, int]]:
+        """(n_shared, n_cow) per group for `reserve_slot`: skipped dead
+        blocks and attached pages both avoid a draw; the mid-page COW
+        only hits groups that actually attached the final block."""
+        shared = {g: j0 + len(pages) for g, (j0, pages) in plan.items()}
+        cow = {
+            g: int(needs_cow and bool(pages))
+            for g, (j0, pages) in plan.items()
+        }
+        return shared, cow
+
+    def attach_chain(self, slot: int,
+                     plan: Dict[int, Tuple[int, List[int]]]) -> None:
+        """Apply a `plan_attach` result: per group, refcount-bump and map
+        the attached pages; the slot must be empty."""
+        for p in self.pools:
+            j0, pages = plan[p.gid]
+            p.attach(slot, j0, pages)
+
     def attach_shared(self, slot: int, pages: Sequence[int]) -> None:
-        """Map an already-allocated page run (a prefix-index hit) as the
-        leading blocks of `slot`'s table. Each page's refcount is bumped;
-        no pool draw happens. The slot must be empty."""
-        assert not self._owned[slot], f"slot {slot} already allocated"
+        """Single-group convenience (the pre-§12 API): map `pages` as the
+        leading blocks of `slot` in EVERY group — callers with one
+        global group (the older tests) see the old behavior exactly."""
         if len(pages) > self.max_blocks_per_slot:
             raise ValueError(f"slot {slot}: {len(pages)} shared pages "
                              f"exceed max {self.max_blocks_per_slot}")
-        for j, p in enumerate(pages):
-            assert p != SCRATCH_PAGE and p in self._ref, p
-            self._ref[p] += 1
-            self.block_table[slot, j] = p
-            self._owned[slot].append(p)
-
-    def ensure_capacity(self, slot: int, n_tokens: int) -> None:
-        """Grow `slot`'s block list to cover `n_tokens` positions."""
-        need = -(-n_tokens // self.block_size)
-        if need > self.max_blocks_per_slot:
-            raise ValueError(
-                f"slot {slot}: {n_tokens} tokens exceed max "
-                f"{self.max_blocks_per_slot * self.block_size}"
-            )
-        while len(self._owned[slot]) < need:
-            b = self._pop_free(slot)
-            self.block_table[slot, len(self._owned[slot])] = b
-            self._owned[slot].append(b)
+        for p in self.pools:
+            p.attach(slot, 0, list(pages))
 
     def free_slot(self, slot: int) -> None:
-        """Drop the slot's reference on each of its pages; exclusively
-        owned pages recycle to the free list, shared ones live on with
-        the remaining holders."""
-        for p in self._owned[slot]:
-            self.release(p)
-        self._owned[slot] = []
-        self._reserved.pop(slot, None)
-        self._drawn.pop(slot, None)
-        self.block_table[slot, :] = SCRATCH_PAGE
+        """Drop the slot's reference on each of its pages in every group;
+        exclusively owned pages recycle, shared ones live on."""
+        for p in self.pools:
+            p.free_slot(slot)
         self.lengths[slot] = 0
 
-    # -- copy-on-write -----------------------------------------------------
+    def slot_block_pages(self, slot: int, block_idx: int) -> Dict[int, int]:
+        """gid -> physical page backing the slot's `block_idx`-th block
+        (groups whose block is dead/unallocated are absent) — what the
+        prefix index publishes."""
+        out = {}
+        for p in self.pools:
+            owned = p._owned[slot]
+            if block_idx < len(owned) and owned[block_idx] is not None:
+                out[p.gid] = owned[block_idx]
+        return out
+
+    # -- copy-on-write / append -------------------------------------------
 
     def _make_writable(self, slot: int, block_idx: int) -> None:
-        """Copy-on-write: if `slot`'s `block_idx`-th page is shared, give
-        the slot a private copy (device-side page copy) and drop its
-        reference on the original — the other sharers' bytes are never
-        touched in place."""
-        old = self._owned[slot][block_idx]
-        if self._ref[old] <= 1:
-            return
-        new = self._pop_free(slot)
-        # one functional update per pool: copy the old page's rows across
-        # every layer into the fresh page
-        self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
-        self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
-        self._ref[old] -= 1
-        self._owned[slot][block_idx] = new
-        self.block_table[slot, block_idx] = new
-        self.cow_events += 1
+        for p in self.pools:
+            if block_idx < len(p._owned[slot]) and \
+                    p._owned[slot][block_idx] is not None:
+                p.make_writable(self, slot, block_idx)
 
     def begin_append(self, slot: int, start: int, n_tokens: int) -> None:
-        """Prepare `slot` for writes covering positions
-        [start, start + n_tokens): grow capacity and COW any shared page
-        in the touched range. Must be called (host-side) before a jitted
-        suffix-prefill or decode scatter so the device block table the
-        jit sees already points at writable pages."""
+        """Prepare `slot` for writes covering [start, start + n_tokens):
+        per group — retire blocks dead for the earliest remaining query
+        (`start`), grow capacity, and COW any shared page in the touched
+        range. Must run host-side BEFORE the jitted scatter so the device
+        table snapshot already points at live, writable pages."""
         if n_tokens <= 0:
             return
-        self.ensure_capacity(slot, start + n_tokens)
         bs = self.block_size
         first = start // bs
         last = (start + n_tokens - 1) // bs
-        for j in range(first, min(last + 1, len(self._owned[slot]))):
-            self._make_writable(slot, j)
+        for p in self.pools:
+            p.retire(slot, start)
+            p.grow(slot, start, start + n_tokens)
+            for j in range(first, min(last + 1, len(p._owned[slot]))):
+                if p._owned[slot][j] is not None:
+                    p.make_writable(self, slot, j)
+
+    def append_position(self, slot: int) -> None:
+        """Account one decoded token (the KV scatter itself happens inside
+        decode_step_paged); grows/retires/COWs as needed — the write
+        target must be exclusively owned BEFORE the jitted scatter."""
+        self.begin_append(slot, int(self.lengths[slot]), 1)
+        self.lengths[slot] += 1
 
     # -- KV data movement --------------------------------------------------
 
@@ -298,9 +622,9 @@ class PagedKVCache:
 
         `start` must be page-aligned unless it targets the slot's last
         shared page (the full-prefix-hit recompute, which COWs first).
-        k/v: [L, S, KV, hd] with the first `n_tokens` rows valid.
-        Allocates and copy-on-writes as needed; sets the slot length to
-        `start + n_tokens`.
+        k/v: [L, S, KV, hd] with the first `n_tokens` rows valid; each
+        layer group scatters its own layer rows through its own table.
+        Sets the slot length to `start + n_tokens`.
         """
         bs = self.block_size
         self.begin_append(slot, start, n_tokens)
@@ -310,98 +634,197 @@ class PagedKVCache:
         lo = first * bs                      # page-aligned window start
         lead = start - lo
         pad = n_pages * bs - lead - n_tokens
-        l, _, kvh, hd = k.shape
-        # one scatter per pool (not per page — a functional .at update
-        # copies the whole pool, so per-page loops cost O(n_pages) copies);
-        # the lead rows re-write what the window's first page already
-        # holds and the tail padding sits beyond the slot's length
-        # (masked) until a decode scatter overwrites it
-        pages = jnp.asarray(
-            np.array(self._owned[slot][first:first + n_pages])
-        )
+        _, _, kvh, hd = k.shape
+        for p in self.pools:
+            owned = p._owned[slot]
+            pages = [owned[j] for j in range(first, first + n_pages)]
+            assert all(pg is not None for pg in pages), (p.gid, slot)
+            lg = jnp.asarray(p.layers)
+            pages_j = jnp.asarray(np.array(pages, np.int32))
+            nl = len(p.layers)
+            k_g = k[np.array(p.layers)]
+            v_g = v[np.array(p.layers)]
 
-        def scatter(pool, src, cur):
-            head = cur[:, :lead] if lead else src[:, :0]
-            src = jnp.concatenate(
-                [head.astype(src.dtype), src[:, :n_tokens]], axis=1
-            )
-            src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            src = src.reshape(l, n_pages, bs, kvh, hd).astype(pool.dtype)
-            return pool.at[:, pages].set(src)
+            def scatter(pool, src, cur):
+                head = cur[:, :lead] if lead else src[:, :0]
+                src = jnp.concatenate(
+                    [head.astype(src.dtype), src[:, :n_tokens]], axis=1
+                )
+                src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                src = src.reshape(nl, n_pages, bs, kvh, hd).astype(
+                    pool.dtype
+                )
+                return pool.at[lg[:, None], pages_j[None, :]].set(src)
 
-        # head rows live entirely in the window's first page (lead < bs)
-        cur_k = self._gather_window(self.k_pages, pages[:1]) if lead else None
-        cur_v = self._gather_window(self.v_pages, pages[:1]) if lead else None
-        self.k_pages = scatter(self.k_pages, k, cur_k)
-        self.v_pages = scatter(self.v_pages, v, cur_v)
+            # head rows live entirely in the window's first page
+            cur_k = cur_v = None
+            if lead:
+                cur_k = self._gather_window(self.k_pages, lg, pages_j[:1])
+                cur_v = self._gather_window(self.v_pages, lg, pages_j[:1])
+            self.k_pages = scatter(self.k_pages, k_g, cur_k)
+            self.v_pages = scatter(self.v_pages, v_g, cur_v)
         self.lengths[slot] = end
 
-    def _gather_window(self, pool: jnp.ndarray, pages: jnp.ndarray):
-        l = pool.shape[0]
+    def _gather_window(self, pool: jnp.ndarray, lg: jnp.ndarray,
+                       pages: jnp.ndarray):
+        nl = lg.shape[0]
         bs, kvh, hd = pool.shape[2], pool.shape[3], pool.shape[4]
-        return pool[:, pages].reshape(l, pages.shape[0] * bs, kvh, hd)
-
-    def append_position(self, slot: int) -> None:
-        """Account one decoded token (the KV scatter itself happens inside
-        decode_step_paged); grows the page list when the slot crosses a
-        block boundary and copy-on-writes a shared tail page — the write
-        target must be exclusively owned BEFORE the jitted scatter runs."""
-        self.begin_append(slot, int(self.lengths[slot]), 1)
-        self.lengths[slot] += 1
+        return pool[lg[:, None], pages[None, :]].reshape(
+            nl, pages.shape[0] * bs, kvh, hd
+        )
 
     # -- device views ------------------------------------------------------
 
-    def device_block_table(self) -> jnp.ndarray:
-        # fresh copy: jnp.asarray of host numpy can be ZERO-COPY on CPU,
-        # and this object mutates block_table/lengths in place — an
-        # aliasing device array would race with async-dispatched decodes
-        return jnp.asarray(np.array(self.block_table))
+    def device_block_tables(self) -> jnp.ndarray:
+        """Each layer's group table: [L, n_slots, max_blocks] int32, or
+        the single shared [n_slots, max_blocks] table when the config
+        has one attention pattern — the model entry points broadcast a
+        2-D table in-graph, so single-group serving transfers exactly
+        the pre-§12 bytes per tick instead of L host-built copies.
+        Fresh copy either way: this object mutates tables in place, and
+        an aliasing device array would race with async-dispatched
+        decodes."""
+        if len(self.pools) == 1:
+            return jnp.asarray(np.array(self.pools[0].block_table))
+        l = self.k_pages.shape[0]
+        full = np.zeros(
+            (l, self.n_slots, self.max_blocks_per_slot), np.int32
+        )
+        for p in self.pools:
+            full[list(p.layers)] = p.block_table
+        return jnp.asarray(full)
+
+    def device_block_starts(self) -> jnp.ndarray:
+        """Each layer's first live block (the kernels' walk-start /
+        bucket-needs input): [L, n_slots] int32, or [n_slots] for a
+        single-group config (broadcast in-graph, like the tables)."""
+        if len(self.pools) == 1:
+            return jnp.asarray(np.array(self.pools[0].first_block))
+        l = self.k_pages.shape[0]
+        full = np.zeros((l, self.n_slots), np.int32)
+        for p in self.pools:
+            full[list(p.layers)] = p.first_block
+        return jnp.asarray(full)
 
     def device_positions(self) -> jnp.ndarray:
         """Per-slot write index for the next decode step (= length)."""
         return jnp.asarray(np.array(self.lengths))
 
     def slot_occupancy(self) -> float:
-        """Fraction of non-scratch pages currently allocated."""
-        return 1.0 - self.n_free / max(self.n_blocks - 1, 1)
+        """Fraction of non-scratch pages allocated, worst group."""
+        return max(
+            1.0 - p.n_free / max(self.n_blocks - 1, 1)
+            for p in self.pools
+        )
 
-    # -- cross-layer accounting (DESIGN.md §9 follow-on, measurement) ------
+    def free_state(self) -> Tuple[int, ...]:
+        """Per-group free counts — the progress snapshot the scheduler's
+        deadlock detector compares across ticks."""
+        return tuple(p.n_free for p in self.pools)
+
+    # -- bucketed dispatch inputs (DESIGN.md §11-§12) ----------------------
+
+    def bucket_needs(self, eff_lengths,
+                     slots: Optional[Sequence[int]] = None
+                     ) -> List[np.ndarray]:
+        """Per-group live walk-entry counts for one launch: a global
+        group walks `ceil(len/bs)` table entries per slot, a windowed
+        group only its live trailing blocks (`... - first_block`). Feed
+        to `kernels.ops.bucket_args_grouped`."""
+        eff = np.maximum(np.asarray(eff_lengths).reshape(-1), 1)
+        blocks = np.minimum(
+            -(-eff // self.block_size), self.max_blocks_per_slot
+        )
+        idx = np.arange(self.n_slots) if slots is None else np.asarray(
+            list(slots)
+        )
+        return [
+            np.maximum(blocks - p.first_block[idx], 1)
+            for p in self.pools
+        ]
+
+    # -- accounting (DESIGN.md §12) ----------------------------------------
+
+    @property
+    def page_layer_bytes(self) -> int:
+        """Bytes of ONE page in ONE layer (K + V)."""
+        _, _, bs, kvh, hd = self.k_pages.shape
+        itemsize = jnp.dtype(self.k_pages.dtype).itemsize
+        return 2 * bs * kvh * hd * itemsize
+
+    def resident_page_bytes(self) -> int:
+        """Bytes of KV actually pinned right now: each group's allocated
+        pages occupy that group's layer rows only — THE capacity number
+        the layer-major layout improves (windowed groups retire, the
+        index retains per group)."""
+        plb = self.page_layer_bytes
+        return sum(
+            len(p.layers) * p.allocated_pages() * plb for p in self.pools
+        )
+
+    def lockstep_equiv_page_bytes(self) -> int:
+        """What the SAME logical state would pin under the pre-§12
+        lockstep layout, where one logical page occupies a slot in every
+        layer's pool. A non-retiring group (global layers, or any group
+        with retirement disabled) never retires or skips, so its
+        allocation count IS the logical page count; on an all-windowed
+        stack with retirement on (no such group — possible when
+        n_layers <= local_global_ratio) the retired logical pages are
+        already freed and unaccountable, so the estimate degrades to a
+        LOWER bound (max over groups). The acceptance benchmark does not
+        rely on this estimator — it measures the lockstep baseline by
+        actually running with `window_retirement=False`."""
+        plb = self.page_layer_bytes
+        n_layers = self.k_pages.shape[0]
+        anchors = [p for p in self.pools if p.retire_window is None]
+        logical = max(
+            p.allocated_pages() for p in (anchors or self.pools)
+        )
+        return n_layers * logical * plb
 
     def cross_layer_dedup_stats(self) -> Dict[str, int]:
-        """Physical-copy accounting across the per-layer pools.
+        """Physical-copy accounting across the layer-major pools
+        (DESIGN.md §12 — since the layout IS layer-major, these are
+        real savings, not the lockstep-era hypotheticals):
 
-        Page ids are shared across layers: one logical page occupies one
-        physical page slot in EVERY layer's K and V pool, so a logical
-        page costs `n_layers * 2 * page_bytes` and prefix sharing
-        (refcount > 1) saves that whole column at once. This measures —
-        it does not change — the layout; a layer-major pool that
-        deduplicates per layer independently is the recorded follow-on.
-
-          allocated_pages          logical pages currently allocated
-          shared_pages             logical pages with refcount > 1
-          extra_refs               sum(refcount - 1): logical copies that
+          allocated_pages          group-pages currently allocated
+                                   (summed over groups)
+          shared_pages             group-pages with refcount > 1
+          extra_refs               sum(refcount - 1) over groups: copies
                                    sharing avoided materializing
-          physical_page_copies     per-layer physical copies actually
-                                   stored = n_layers * allocated_pages
+          physical_page_copies     per-layer physical copies stored
+                                   = sum_g n_layers_g * allocated_g
           deduped_page_copies      per-layer copies sharing avoided
-                                   = n_layers * extra_refs
+                                   = sum_g n_layers_g * extra_g
           page_layer_bytes         bytes of ONE page in ONE layer (K+V)
-          physical_bytes / deduped_bytes   the two above in bytes
+          physical_bytes / deduped_bytes    the two above in bytes
+          retired_pages            window-retired pages (lifetime)
+          resident_bytes           physical_bytes (alias)
+          lockstep_equiv_bytes     the same state under lockstep page ids
         """
-        n_layers, _, bs, kvh, hd = self.k_pages.shape
-        itemsize = jnp.dtype(self.k_pages.dtype).itemsize
-        page_layer_bytes = 2 * bs * kvh * hd * itemsize   # K + V
-        allocated = len(self._ref)
-        shared = sum(1 for r in self._ref.values() if r > 1)
-        extra = sum(r - 1 for r in self._ref.values())
+        plb = self.page_layer_bytes
+        n_layers = self.k_pages.shape[0]
+        allocated = sum(p.allocated_pages() for p in self.pools)
+        shared = sum(
+            sum(1 for r in p._ref.values() if r > 1) for p in self.pools
+        )
+        extra = sum(p.extra_refs() for p in self.pools)
+        phys = sum(
+            len(p.layers) * p.allocated_pages() for p in self.pools
+        )
+        dedup = sum(len(p.layers) * p.extra_refs() for p in self.pools)
         return {
             "n_layers": int(n_layers),
+            "n_groups": len(self.pools),
             "allocated_pages": allocated,
             "shared_pages": shared,
             "extra_refs": extra,
-            "physical_page_copies": n_layers * allocated,
-            "deduped_page_copies": n_layers * extra,
-            "page_layer_bytes": page_layer_bytes,
-            "physical_bytes": n_layers * allocated * page_layer_bytes,
-            "deduped_bytes": n_layers * extra * page_layer_bytes,
+            "physical_page_copies": phys,
+            "deduped_page_copies": dedup,
+            "page_layer_bytes": plb,
+            "physical_bytes": phys * plb,
+            "deduped_bytes": dedup * plb,
+            "retired_pages": self.pages_retired,
+            "resident_bytes": phys * plb,
+            "lockstep_equiv_bytes": self.lockstep_equiv_page_bytes(),
         }

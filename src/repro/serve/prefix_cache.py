@@ -5,24 +5,35 @@ headers) should never store the same KV bytes twice, and — with the
 paged-prefill kernel — should never *compute* them twice either. The
 index is a radix trie over **full KV pages**: each node corresponds to
 one `block_size`-token block of some previously-served prompt, keyed by
-the block's token content, and records the physical page holding that
-block's KV. A child is only meaningful under its parent (the KV of a
-block depends on every token before it), so the trie edge structure *is*
-the correctness argument: a lookup walks the prompt block-by-block from
-the root and can only hand out pages whose entire token history matches.
+the block's token content. A child is only meaningful under its parent
+(the KV of a block depends on every token before it), so the trie edge
+structure *is* the correctness argument: a lookup walks the prompt
+block-by-block from the root and can only hand out pages whose entire
+token history matches.
 
-Reference discipline: the index holds one retain (`PagedKVCache.retain`)
-on every page it maps, so pages survive the slot that produced them and
-later requests can hit them. Slots that attach a hit add their own
-reference; a page recycles only when the last holder — slot or index —
-releases it. Writes into shared pages go through copy-on-write in the
-cache layer, so published bytes are immutable.
+**Layer-major (DESIGN.md §12):** a node records one physical page PER
+LAYER GROUP (`pages: {gid: page}`) — the same logical block lives at
+independent page ids in each group's pool. Groups may be absent: a
+sliding-window group whose publisher window-skipped or retired the block
+simply has no page there, and never pays retention for it. That is the
+"true per-layer dedup": a windowed layer group retains only the blocks
+its window can still reach, while global groups retain the full prefix.
+Whether a later hit can use a chain with missing group pages is decided
+by `PagedKVCache.plan_attach` (a missing block is fine exactly when the
+window masks it for every suffix query).
+
+Reference discipline: the index holds one retain per (group, page) it
+maps, so pages survive the slot that produced them. Slots that attach a
+hit add their own references; a page recycles only when the last holder
+— slot or index — releases it. Writes into shared pages go through
+copy-on-write in the cache layer, so published bytes are immutable.
 
 Eviction: when admission fails for want of pages, the scheduler calls
-`evict` — leaf nodes whose page is referenced by nobody but the index
-are released, oldest-touched first (removing a leaf may expose its
-parent, so the walk repeats until satisfied or stuck). Smarter policies
-(size-aware, hit-rate-aware) are a recorded ROADMAP follow-on.
+`evict` with the per-group draw deficit. Victims are nodes whose every
+page is referenced by nobody but the index, chosen by **value density**
+(hit count per retained layer-byte — a never-hit node pinning many
+layers' bytes goes first), oldest-stamp tie-broken; removing a leaf may
+expose its parent, so the walk repeats until satisfied or stuck.
 """
 
 from __future__ import annotations
@@ -36,26 +47,28 @@ from .paged_cache import PagedKVCache
 
 
 class _Node:
-    __slots__ = ("key", "page", "parent", "children", "stamp")
+    __slots__ = ("key", "pages", "parent", "children", "stamp", "hits")
 
-    def __init__(self, key, page: int, parent: Optional["_Node"]):
+    def __init__(self, key, pages: Dict[int, int],
+                 parent: Optional["_Node"]):
         self.key = key                  # tuple of block_size token ids
-        self.page = page                # physical page holding this block's KV
+        self.pages = pages              # gid -> physical page of the block
         self.parent = parent
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
-        self.stamp = 0                  # last-touched tick (eviction order)
+        self.stamp = 0                  # last-touched tick
+        self.hits = 0                   # lookup matches (eviction scoring)
 
 
 class PrefixIndex:
-    """Radix/trie index from full-page token prefixes to physical pages.
+    """Radix/trie index from full-page token prefixes to per-group pages.
 
-    `max_retained_fraction` caps how much of the pool the index may pin:
-    the index never holds retains on more than that fraction of the
-    usable (non-scratch) pages. `publish` enforces it — once at the cap
-    it evicts an index-only page (oldest leaf) to make room for each new
-    block, and stops publishing when nothing is evictable — so a
-    prefix-heavy trace cannot starve admission of its working pages.
-    The default (1.0) preserves the uncapped behavior."""
+    `max_retained_fraction` caps how much of EACH group's pool the index
+    may pin: the index never holds retains on more than that fraction of
+    a group's usable (non-scratch) pages. `publish` enforces it — once a
+    group is at the cap it evicts an index-only page to make room, and
+    stops publishing when nothing is evictable — so a prefix-heavy trace
+    cannot starve admission of its working pages. The default (1.0)
+    preserves the uncapped behavior."""
 
     def __init__(self, block_size: int, max_retained_fraction: float = 1.0):
         if not 0.0 <= max_retained_fraction <= 1.0:
@@ -65,11 +78,10 @@ class PrefixIndex:
             )
         self.block_size = block_size
         self.max_retained_fraction = max_retained_fraction
-        self.root = _Node(key=None, page=-1, parent=None)
+        self.root = _Node(key=None, pages={}, parent=None)
         self._clock = 0
-        #: pages the index currently retains (== node count: one retain
-        #: per node), maintained by publish/evict/drop_all
-        self.retained_pages = 0
+        #: retains currently held, per layer group
+        self.retained_by_group: Dict[int, int] = collections.defaultdict(int)
         # stats (surfaced by benchmarks/prefix_bench.py). hits/lookups
         # count ADMITTED requests — the scheduler bumps them once per
         # admission, not once per (possibly retried) lookup attempt
@@ -78,8 +90,13 @@ class PrefixIndex:
         self.cached_tokens_served = 0   # prompt tokens skipped via hits
         self.evicted_pages = 0
 
+    @property
+    def retained_pages(self) -> int:
+        """Total (group, page) retains the index currently holds."""
+        return sum(self.retained_by_group.values())
+
     def page_cap(self, cache: PagedKVCache) -> int:
-        """Max pages the index may retain in `cache`'s pool."""
+        """Max pages the index may retain in EACH group's pool."""
         return int(self.max_retained_fraction * (cache.n_blocks - 1))
 
     # -- helpers -----------------------------------------------------------
@@ -105,83 +122,120 @@ class PrefixIndex:
             stack.extend(node.children.values())
         return n
 
-    def page_refs(self) -> Dict[int, int]:
-        """page -> number of index retains (for invariant checking)."""
-        refs: Dict[int, int] = collections.defaultdict(int)
+    def page_refs(self) -> Dict[int, Dict[int, int]]:
+        """gid -> {page: index retains} (for invariant checking)."""
+        refs: Dict[int, Dict[int, int]] = collections.defaultdict(
+            lambda: collections.defaultdict(int)
+        )
         stack = [self.root]
         while stack:
             node = stack.pop()
             for c in node.children.values():
-                refs[c.page] += 1
+                for gid, page in c.pages.items():
+                    refs[gid][page] += 1
                 stack.append(c)
-        return dict(refs)
+        return {g: dict(d) for g, d in refs.items()}
 
     # -- lookup / publish --------------------------------------------------
 
-    def lookup(self, tokens, keys: Optional[List[Tuple[int, ...]]] = None
-               ) -> List[int]:
-        """Longest full-page prefix match: physical pages for the leading
-        blocks of `tokens` whose entire history is cached. The caller
-        decides how many of them to actually share (it must keep at least
-        one prompt token to prefill — see `split_prompt`). Pass
-        precomputed `keys` (`block_keys`) to skip re-tokenizing."""
+    def lookup_chain(self, tokens,
+                     keys: Optional[List[Tuple[int, ...]]] = None
+                     ) -> List[_Node]:
+        """Longest full-page prefix match: the matched node chain for the
+        leading blocks of `tokens` whose entire history is cached. The
+        caller turns it into a per-group attach plan
+        (`PagedKVCache.plan_attach`) and decides how many blocks to
+        actually share (`split_prompt` keeps one token to prefill)."""
         self._clock += 1
-        node, pages = self.root, []
+        node, chain = self.root, []
         for key in keys if keys is not None else self.block_keys(tokens):
             child = node.children.get(key)
             if child is None:
                 break
             child.stamp = self._clock
-            pages.append(child.page)
+            child.hits += 1
+            chain.append(child)
             node = child
-        return pages
+        return chain
 
-    def split_prompt(self, tokens, pages: List[int]) -> Tuple[int, bool]:
-        """Given a `lookup` result, return `(n_cached, needs_cow)`:
-        `n_cached` prompt tokens are served from the shared pages and the
-        suffix `tokens[n_cached:]` must still be prefilled. At least one
-        token is always left to prefill (the model needs a forward pass
-        to produce next-token logits), so a hit covering the *entire*
-        prompt recomputes its final token — whose KV write lands mid-page
-        in the last shared page, the copy-on-write case (`needs_cow`)."""
+    def lookup(self, tokens, keys: Optional[List[Tuple[int, ...]]] = None
+               ) -> List[int]:
+        """Single-group convenience: the matched chain's group-0 pages
+        (the whole story for configs with one attention pattern)."""
+        return [n.pages.get(0, -1) for n in self.lookup_chain(tokens, keys)]
+
+    def split_prompt(self, tokens, pages) -> Tuple[int, bool]:
+        """Given a `lookup`/`lookup_chain` result, return
+        `(n_cached, needs_cow)`: `n_cached` prompt tokens are served from
+        the shared pages and the suffix `tokens[n_cached:]` must still be
+        prefilled. At least one token is always left to prefill (the
+        model needs a forward pass to produce next-token logits), so a
+        hit covering the *entire* prompt recomputes its final token —
+        whose KV write lands mid-page in the last shared page, the
+        copy-on-write case (`needs_cow`)."""
         t = int(np.asarray(tokens).reshape(-1).shape[0])
         n_cached = min(len(pages) * self.block_size, t - 1)
         needs_cow = bool(n_cached % self.block_size)
         return n_cached, needs_cow
 
+    def _make_room(self, cache: PagedKVCache, gid: int, protect) -> bool:
+        """Cap enforcement for one group: displace an index-only page
+        when the group sits at its retained cap."""
+        cap = self.page_cap(cache)
+        if self.retained_by_group[gid] < cap:
+            return True
+        return bool(self.evict(cache, {gid: 1}, protect=protect))
+
     def publish(self, tokens, cache: PagedKVCache, slot: int,
                 keys: Optional[List[Tuple[int, ...]]] = None) -> int:
-        """Insert the prompt's full-page blocks, backed by `slot`'s pages,
-        after its prefill completed. Already-indexed blocks are kept as-is
-        (first writer wins — the bytes are equivalent by construction);
-        each newly-indexed page gets one index retain. Returns the number
-        of pages newly published."""
+        """Insert the prompt's full-page blocks, backed by `slot`'s
+        per-group pages, after its prefill completed. Already-indexed
+        blocks keep their pages (first writer wins — the bytes are
+        equivalent by construction) but may be FILLED IN for groups the
+        first writer lacked (its window had skipped the block; a shorter
+        publisher still owns it). Groups whose block is dead in the slot
+        are simply absent from the node — a windowed group never retains
+        out-of-window prefix bytes. Each newly-indexed (group, page) gets
+        one index retain. Returns the number of pages newly retained."""
         self._clock += 1
         node, added = self.root, 0
         path = {self.root}
-        owned = cache.owned_blocks(slot)
-        cap = self.page_cap(cache)
         if keys is None:
             keys = self.block_keys(tokens)
         for j, key in enumerate(keys):
+            avail = cache.slot_block_pages(slot, j)
             child = node.children.get(key)
             if child is None:
-                # cap enforcement: displace the coldest index-only page.
-                # The nodes already walked this publish are protected —
-                # evicting the chain the new node hangs off would attach
-                # it to a detached parent and leak its retain
-                if self.retained_pages >= cap and not self.evict(
-                    cache, 1, protect=path
-                ):
-                    # at the retained-fraction cap and nothing is
-                    # index-only evictable: stop publishing — the blocks
-                    # already inserted stay (their history is complete)
+                if not avail:
                     break
-                child = _Node(key=key, page=int(owned[j]), parent=node)
+                # cap enforcement per group: displace the lowest-value
+                # index-only page. The nodes already walked this publish
+                # are protected — evicting the chain the new node hangs
+                # off would attach it to a detached parent and leak its
+                # retains
+                if not all(
+                    self._make_room(cache, gid, path) for gid in avail
+                ):
+                    # at the retained cap and nothing evictable: stop
+                    # publishing — blocks already inserted stay (their
+                    # history is complete)
+                    break
+                child = _Node(key=key, pages=dict(avail), parent=node)
                 node.children[key] = child
-                cache.retain(child.page)
-                self.retained_pages += 1
-                added += 1
+                for gid, page in avail.items():
+                    cache.retain(page, gid)
+                    self.retained_by_group[gid] += 1
+                    added += 1
+            else:
+                for gid, page in avail.items():
+                    if gid in child.pages:
+                        continue
+                    if not self._make_room(cache, gid, path | {child}):
+                        continue
+                    child.pages[gid] = page
+                    cache.retain(page, gid)
+                    self.retained_by_group[gid] += 1
+                    added += 1
             child.stamp = self._clock
             node = child
             path.add(node)
@@ -189,64 +243,117 @@ class PrefixIndex:
 
     # -- eviction ----------------------------------------------------------
 
-    def _prunable_count(self, cache: PagedKVCache, protect=frozenset()) -> int:
-        """Pages eviction could release right now: nodes whose page is
-        index-only (refcount 1), not protected, and whose entire subtree
-        is likewise prunable (a retained or protected descendant pins
-        every ancestor in place)."""
+    def _node_evictable(self, cache: PagedKVCache, node: _Node,
+                        protect) -> bool:
+        return node not in protect and all(
+            cache.refcount(page, gid) == 1
+            for gid, page in node.pages.items()
+        )
 
-        def walk(node: _Node) -> Tuple[int, bool]:
-            count, all_ok = 0, True
+    def _prunable_counts(self, cache: PagedKVCache,
+                         protect=frozenset()) -> Dict[int, int]:
+        """Pages per group that eviction could release right now: nodes
+        whose every page is index-only, not protected, and whose entire
+        subtree is likewise prunable (a retained or protected descendant
+        pins every ancestor in place)."""
+        counts: Dict[int, int] = collections.defaultdict(int)
+
+        def walk(node: _Node) -> bool:
+            all_ok = True
             for c in node.children.values():
-                ccount, cok = walk(c)
-                count += ccount
-                all_ok = all_ok and cok
+                all_ok = walk(c) and all_ok
             if node is self.root:
-                return count, all_ok
-            ok = (
-                all_ok
-                and cache.refcount(node.page) == 1
-                and node not in protect
-            )
-            return count + int(ok), ok
+                return all_ok
+            ok = all_ok and self._node_evictable(cache, node, protect)
+            if ok:
+                for gid in node.pages:
+                    counts[gid] += 1
+            return ok
 
-        return walk(self.root)[0]
+        walk(self.root)
+        return counts
 
-    def evict(
-        self, cache: PagedKVCache, n_pages: int, protect=frozenset()
-    ) -> int:
-        """Release `n_pages` index-only pages (refcount 1 — no slot is
-        using them), leaf-first and oldest-stamp-first, or NOTHING when
-        fewer than `n_pages` are evictable — partially draining the index
-        would destroy hot prefixes without unblocking the caller's
-        admission. Returns the number of pages released (0 or n_pages).
+    def _evict_score(self, cache: PagedKVCache, node: _Node):
+        """Value density: hits per retained layer-byte. A cold node that
+        pins many layers' bytes (a global-group page in a deep stack)
+        scores lowest and goes first; equal-density ties fall back to
+        oldest-stamp (the pre-§12 pure LRU)."""
+        layer_weight = sum(
+            len(cache.pools[gid].layers) for gid in node.pages
+        )
+        return ((1 + node.hits) / max(layer_weight, 1), node.stamp)
+
+    def evict(self, cache: PagedKVCache, n_pages,
+              protect=frozenset()) -> int:
+        """Release index-only pages until the demand is met, or release
+        NOTHING when it cannot be (partially draining the index would
+        destroy hot prefixes without unblocking the caller's admission).
+
+        `n_pages` is a per-group demand dict `{gid: pages}` (the
+        scheduler's reserve deficits) or an int, which addresses group 0
+        (single-group configs — the pre-§12 signature). Victim nodes
+        release ALL their group pages; they are chosen lowest
+        value-density first (`_evict_score`), leaves before the parents
+        they expose. Returns total pages released (0 when unsatisfiable).
         `protect` nodes are never victims (publish shields the chain it
-        is standing on). Each trie scan drains every currently-evictable
-        leaf (oldest first) before rescanning — a rescan is only needed
-        when deleting leaves exposes their parents — so the walk is
-        O(depth * index), not O(n_pages * index)."""
-        if self._prunable_count(cache, protect) < n_pages:
+        is standing on)."""
+        needs: Dict[int, int] = (
+            dict(n_pages) if isinstance(n_pages, dict) else {0: n_pages}
+        )
+        needs = {g: n for g, n in needs.items() if n > 0}
+        if not needs:
             return 0
-        released = 0
-        while released < n_pages:
+        prunable = self._prunable_counts(cache, protect)
+        if any(prunable.get(g, 0) < n for g, n in needs.items()):
+            return 0
+        released: Dict[int, int] = collections.defaultdict(int)
+        total = 0
+
+        def satisfied():
+            return all(released[g] >= n for g, n in needs.items())
+
+        def useful(node):
+            return any(
+                released[g] < needs.get(g, 0) for g in node.pages
+            )
+
+        def drop(victim):
+            nonlocal total
+            del victim.parent.children[victim.key]
+            for gid, page in victim.pages.items():
+                cache.release(page, gid)
+                released[gid] += 1
+                self.retained_by_group[gid] -= 1
+                total += 1
+
+        while not satisfied():
             victims = sorted(
                 (
                     n for n in self._leaves()
-                    if cache.refcount(n.page) == 1 and n not in protect
+                    if self._node_evictable(cache, n, protect)
                 ),
-                key=lambda n: n.stamp,
+                key=lambda n: self._evict_score(cache, n),
             )
             if not victims:
                 break
+            # only victims holding a page in a still-unsatisfied group
+            # count as progress — evicting others would wipe unrelated
+            # (possibly hot) prefixes as collateral. When no leaf is
+            # useful, the needed pages sit on interior nodes (the
+            # prunable pre-check proved they exist): drop ONE lowest-
+            # value leaf to expose its parent, then rescan.
+            progressed = False
             for victim in victims:
-                if released >= n_pages:
+                if satisfied():
                     break
-                del victim.parent.children[victim.key]
-                cache.release(victim.page)
-                released += 1
-        self.evicted_pages += released
-        self.retained_pages -= released
-        return released
+                if not useful(victim):
+                    continue
+                drop(victim)
+                progressed = True
+            if not satisfied() and not progressed:
+                drop(victims[0])
+        self.evicted_pages += total
+        return total
 
     def _leaves(self) -> List[_Node]:
         out, stack = [], list(self.root.children.values())
@@ -261,10 +368,11 @@ class PrefixIndex:
     def drop_all(self, cache: PagedKVCache) -> int:
         """Release every index reference (teardown / tests)."""
         n = 0
-        for page, cnt in self.page_refs().items():
-            for _ in range(cnt):
-                cache.release(page)
-                n += 1
-        self.root = _Node(key=None, page=-1, parent=None)
-        self.retained_pages = 0
+        for gid, refs in self.page_refs().items():
+            for page, cnt in refs.items():
+                for _ in range(cnt):
+                    cache.release(page, gid)
+                    n += 1
+        self.root = _Node(key=None, pages={}, parent=None)
+        self.retained_by_group = collections.defaultdict(int)
         return n

@@ -62,7 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..kernels.ops import bucket_args, resolve_bucket_strategy
+from ..kernels.ops import bucket_args_grouped, resolve_bucket_strategy
 from ..models import decode_step, init_cache, prefill
 from .compiled import jit_paged_decode, jit_paged_prefill
 from .paged_cache import PagedKVCache
@@ -120,6 +120,7 @@ class ContinuousBatcher:
         kernel_impl: str = "auto",
         bucket_strategy: str = "pow2",
         prefix_max_retained_fraction: float = 1.0,
+        window_retirement: bool = True,
     ):
         self.cfg = cfg
         self.params = params
@@ -161,7 +162,7 @@ class ContinuousBatcher:
         if paged:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
-                n_blocks=n_blocks,
+                n_blocks=n_blocks, window_retirement=window_retirement,
             )
             self.cache = None
             self._decode_paged = jit_paged_decode(cfg, impl=kernel_impl)
@@ -196,8 +197,8 @@ class ContinuousBatcher:
                         # nothing in the queue fits right now; later slots
                         # see the same pool, so stop scanning this tick
                         return
-                    req, pages, n_cached = admitted
-                    self._prefill_into_paged(i, req, pages, n_cached)
+                    req, attach_plan, n_cached = admitted
+                    self._prefill_into_paged(i, req, attach_plan, n_cached)
                 else:
                     self._prefill_into_dense(i, self.queue.popleft())
 
@@ -205,40 +206,56 @@ class ContinuousBatcher:
 
     def _try_reserve(self, slot: int, req: Request):
         """Reserve worst-case pages (prompt + all decode growth + COW)
-        for `req`, after a prefix-index lookup. Returns
-        (shared_pages, n_cached) on success, or the pool-draw deficit
-        (int > 0) when the pool cannot admit right now."""
+        for `req` in EVERY layer group, after a prefix-index lookup.
+        Returns (attach_plan, n_cached) on success — `attach_plan` the
+        per-group page mapping of `PagedKVCache.plan_attach` (None for a
+        miss) — or the per-group pool-draw deficit dict when some group
+        cannot admit right now."""
         pc = self.pcache
         t = int(req.prompt.shape[0])
         total = t + max(req.max_new_tokens - 1, 0)
-        pages: List[int] = []
+        attach_plan = None
         n_cached, cow = 0, False
         if self.prefix is not None:
             if req.block_keys is None:
                 req.block_keys = self.prefix.block_keys(
                     np.asarray(req.prompt)
                 )
-            pages = self.prefix.lookup(req.prompt, keys=req.block_keys)
-            n_cached, cow = self.prefix.split_prompt(req.prompt, pages)
-            pages = pages[: -(-n_cached // pc.block_size)] if n_cached else []
-        n_cow = int(cow and bool(pages))
-        if pc.reserve_slot(slot, total, n_shared=len(pages), n_cow=n_cow):
-            return pages, n_cached
-        draws = pc.draws_for(total, n_shared=len(pages), n_cow=n_cow)
-        return max(draws - pc.available_blocks(), 1)
+            chain = self.prefix.lookup_chain(
+                req.prompt, keys=req.block_keys
+            )
+            n_cached, cow = self.prefix.split_prompt(req.prompt, chain)
+            if n_cached:
+                nbh = -(-n_cached // pc.block_size)
+                attach_plan = pc.plan_attach(
+                    [n.pages for n in chain[:nbh]], n_cached
+                )
+                if attach_plan is None:
+                    # some windowed group is missing a block its window
+                    # still reaches — shrinking the hit only widens the
+                    # reach, so take the miss path
+                    n_cached, cow = 0, False
+        if attach_plan is not None and n_cached:
+            shared, n_cow = pc.attach_plan_counts(attach_plan, cow)
+        else:
+            attach_plan, shared, n_cow = None, 0, 0
+        if pc.reserve_slot(slot, total, n_shared=shared, n_cow=n_cow):
+            return attach_plan, n_cached
+        return pc.reserve_deficits(total, shared, n_cow)
 
     def _admit_paged(self, slot: int):
         """First admissible queued request (FIFO among admissible): the
         admission check runs down the whole queue, so one large request
         waiting for pages cannot head-of-line-block small ones behind it.
         Cached index pages are only sacrificed as a last resort: a second
-        pass evicts exactly a request's missing draw count and retries,
-        and only runs when NOTHING was admissible without eviction."""
+        pass evicts exactly a request's per-group missing draw counts and
+        retries, and only runs when NOTHING was admissible without
+        eviction."""
         pc = self.pcache
         deficits = []
         for qi in range(len(self.queue)):
             got = self._try_reserve(slot, self.queue[qi])
-            if not isinstance(got, int):
+            if not isinstance(got, dict):
                 req = self.queue[qi]
                 del self.queue[qi]
                 return (req,) + got
@@ -251,7 +268,7 @@ class ContinuousBatcher:
                 # the freshest stamps, so they go last) — redo lookup +
                 # reservation from scratch
                 got = self._try_reserve(slot, self.queue[qi])
-                if not isinstance(got, int):
+                if not isinstance(got, dict):
                     req = self.queue[qi]
                     del self.queue[qi]
                     return (req,) + got
@@ -264,32 +281,37 @@ class ContinuousBatcher:
         self._start_slot(i, req, logits)
 
     def _prefill_into_paged(
-        self, i: int, req: Request, pages: List[int], n_cached: int
+        self, i: int, req: Request, attach_plan, n_cached: int
     ):
-        """Suffix-only prefill: attach the prefix-hit pages refcounted,
-        COW/grow for the suffix window, run the jitted paged prefill on
-        the uncached tokens, then publish the completed full-page blocks
-        back to the index."""
+        """Suffix-only prefill: attach the prefix-hit pages refcounted
+        (per layer group — a windowed group maps only the blocks its
+        window still reaches), COW/grow for the suffix window, run the
+        jitted paged prefill on the uncached tokens, then publish the
+        completed full-page blocks back to the index."""
         pc = self.pcache
         t = int(req.prompt.shape[0])
         bs = pc.block_size
-        if pages:
-            pc.attach_shared(i, pages)
+        if attach_plan is not None:
+            pc.attach_chain(i, attach_plan)
         ns = t - n_cached
         pad = -(-ns // bs) * bs
         # host-side page prep BEFORE the device table snapshot: capacity
         # for the full prompt, COW of any shared page the scatter touches
         pc.begin_append(i, n_cached, ns)
         toks = jnp.pad(req.prompt[n_cached:], (0, pad - ns))[None, :]
-        # bucket the one-slot launch by the prompt's page occupancy so
-        # the prefill walk stops at the prompt's bucket bound instead of
-        # streaming the slot's whole max_blocks-deep table
-        plan, perm = self._bucket_args([t])
+        # bucket the one-slot launch by the prompt's LIVE page occupancy
+        # per layer group so the prefill walk stops at the bucket bound
+        # instead of streaming the slot's whole max_blocks-deep table
+        plans, perms = self._bucket_args([t], slots=[i])
+        bt, st = pc.device_block_tables(), pc.device_block_starts()
+        if bt.ndim == 2:                 # single group: [B, mb] / [B]
+            bt, st = bt[i: i + 1], st[i: i + 1]
+        else:                            # layer-major: [L, B, mb] / [L, B]
+            bt, st = bt[:, i: i + 1], st[:, i: i + 1]
         logits, pc.k_pages, pc.v_pages = self._prefill_paged(
-            self.params, toks, pc.k_pages, pc.v_pages,
-            pc.device_block_table()[i: i + 1],
+            self.params, toks, pc.k_pages, pc.v_pages, bt, st,
             jnp.asarray([n_cached], jnp.int32), jnp.asarray([t], jnp.int32),
-            jnp.asarray(ns - 1, jnp.int32), perm, plan=plan,
+            jnp.asarray(ns - 1, jnp.int32), perms, plans=plans,
         )
         pc.lengths[i] = t
         self.prefill_tokens += pad
@@ -352,37 +374,51 @@ class ContinuousBatcher:
         self.ticks += 1
         return len(active)
 
-    def _bucket_args(self, eff_lengths):
-        """Slot→bucket packing for one launch (DESIGN.md §11): the
-        shared `ops.bucket_args` policy over this batcher's pool."""
-        return bucket_args(
-            self.bucket_strategy, self._kernel_impl, eff_lengths,
-            self.pcache.block_size, self.pcache.max_blocks_per_slot,
+    def _bucket_args(self, eff_lengths, slots=None):
+        """Per-group slot→bucket packing for one launch (DESIGN.md
+        §11-§12): global groups bucket by total occupancy, windowed
+        groups by LIVE trailing pages (their retired head is skipped by
+        the kernels' walk start)."""
+        return bucket_args_grouped(
+            self.bucket_strategy, self._kernel_impl,
+            self.pcache.bucket_needs(eff_lengths, slots),
+            self.pcache.max_blocks_per_slot,
         )
 
     def _step_paged(self, active: List[int]) -> jnp.ndarray:
         pc = self.pcache
         for i in active:  # page for the incoming token must exist (and be
-            # exclusively owned — COW) before the jitted scatter
+            # exclusively owned — COW; window-dead blocks retire) before
+            # the jitted scatter
             pc.begin_append(i, int(pc.lengths[i]), 1)
         # this decode attends over position + 1 kv rows per slot (idle
         # slots: 1 scratch row) — bucket the batch by that occupancy
-        plan, perm = self._bucket_args(pc.lengths + 1)
+        plans, perms = self._bucket_args(pc.lengths + 1)
         logits, pc.k_pages, pc.v_pages = self._decode_paged(
             self.params, self.tokens, pc.k_pages, pc.v_pages,
-            pc.device_block_table(), pc.device_positions(), perm, plan=plan,
+            pc.device_block_tables(), pc.device_block_starts(),
+            pc.device_positions(), perms, plans=plans,
         )
         for i in active:
             pc.lengths[i] += 1
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
 
     def _pool_diagnostic(self) -> str:
+        """Per-layer-group pool state for the deadlock diagnostic — with
+        layer-major pools a single global free count is meaningless: one
+        starved group (usually the global layers) blocks admission while
+        the windowed groups sit half empty."""
         if self.pcache is None:
             return ""
         pc = self.pcache
+        per_group = ", ".join(
+            f"g{p.gid}[{'global' if p.window is None else f'w={p.window}'}"
+            f"×{len(p.layers)}L]: {p.n_free}/{pc.n_blocks - 1} free, "
+            f"{p.available_blocks()} unreserved"
+            for p in pc.pools
+        )
         return (
-            f"; pool: {pc.n_free}/{pc.n_blocks - 1} pages free, "
-            f"{pc.available_blocks()} unreserved, "
+            f"; pools: {per_group}; "
             f"occupancy={pc.slot_occupancy():.2f}"
         )
 
@@ -410,7 +446,7 @@ class ContinuousBatcher:
         ticks = 0
         while (self.queue or any(s is not None for s in self.slots)) and ticks < max_ticks:
             queued_before = len(self.queue)
-            free_before = self.pcache.n_free if self.paged else 0
+            free_before = self.pcache.free_state() if self.paged else ()
             advanced = self.step()
             ticks += 1
             if on_tick is not None:
@@ -419,7 +455,8 @@ class ContinuousBatcher:
                 advanced == 0
                 and self.queue
                 and len(self.queue) == queued_before
-                and (not self.paged or self.pcache.n_free == free_before)
+                and (not self.paged
+                     or self.pcache.free_state() == free_before)
             ):
                 raise RuntimeError(
                     f"run_until_drained: deadlock at tick {ticks} — no "

@@ -85,6 +85,51 @@ def test_strategy_none_and_empty_are_single_launch():
         ops.resolve_bucket_strategy("")
 
 
+def test_needs_override_buckets_by_live_pages():
+    """DESIGN.md §12: `needs=` replaces the length-derived walk counts —
+    a windowed layer at full length but 3 live trailing blocks plans a
+    shallow walk where the length-only plan degenerates to the single
+    full-depth launch."""
+    bs, mb = 4, 32
+    lens = [mb * bs, mb * bs]              # full occupancy
+    assert ops.make_bucket_plan(lens, bs, mb) == (None, None)
+    plan, perm = ops.make_bucket_plan(None, bs, mb, needs=[2, 3])
+    assert plan == ((2, 1), (4, 1))        # pow2 bounds of 2 and 3
+    assert perm.tolist() == [0, 1]
+    assert ops.plan_streamed_pages(plan, 2, mb) == 6 < 2 * mb
+    # needs are clamped to >= 1 (idle slots still walk one block)
+    plan0, _ = ops.make_bucket_plan(None, bs, mb, needs=[0, 0])
+    assert plan0 == ((1, 2),)
+
+
+def test_is_bucket_plan_distinguishes_plan_from_plan_tuple():
+    plan = ((4, 2), (8, 1))
+    assert ops.is_bucket_plan(plan)
+    assert not ops.is_bucket_plan((plan, None))      # per-group tuple
+    assert not ops.is_bucket_plan((None, plan))
+    assert not ops.is_bucket_plan(None)
+
+
+def test_bucket_args_grouped_static_dynamic_split():
+    """Per-group packing (DESIGN.md §12): one plan per needs array, jnp
+    perms, all-None degrading to the single-launch pair, and the
+    oracle/none-strategy short-circuits."""
+    needs = [np.asarray([2, 3]), np.asarray([8, 8])]
+    plans, perms = ops.bucket_args_grouped(
+        "pow2", "pallas_interpret", needs, 8
+    )
+    assert plans == (((2, 1), (4, 1)), None)   # group 1 is uniform-full
+    assert perms[0].tolist() == [0, 1] and perms[1] is None
+    assert hash(plans) is not None         # static jit key
+    # every group degenerate -> single launch everywhere
+    assert ops.bucket_args_grouped(
+        "pow2", "pallas_interpret", [np.asarray([8, 8])], 8
+    ) == (None, None)
+    assert ops.bucket_args_grouped("none", "pallas_interpret", needs, 8) \
+        == (None, None)
+    assert ops.bucket_args_grouped("pow2", "ref", needs, 8) == (None, None)
+
+
 def test_recompile_set_is_bounded():
     """Every plan drawn from ANY length vector of <= n slots over a
     table of width mb uses (bound, count) pairs from the small pow2 grid

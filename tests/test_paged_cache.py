@@ -349,7 +349,7 @@ def test_run_until_drained_raises_immediately_on_deadlock(model):
         pc._ref[pc.free_blocks.popleft()] = 1
     cb.submit(Request(uid=0, prompt=_prompt(0, 8, cfg.vocab_size),
                       max_new_tokens=4))
-    with pytest.raises(RuntimeError, match="deadlock at tick 1.*pool:"):
+    with pytest.raises(RuntimeError, match="deadlock at tick 1.*pools:.*g0"):
         cb.run_until_drained(max_ticks=10_000)
 
 
