@@ -1,0 +1,101 @@
+"""CI invariant checks over the serve-bench telemetry artifacts.
+
+Run after ``benchmarks/serve_bench.py``:
+
+    python benchmarks/check_metrics.py [--metrics results/serve_metrics.json]
+                                       [--events results/serve_events.jsonl]
+
+Asserts the DESIGN.md §13 invariants the smoke job publishes:
+
+  * TTFT/TPOT/queue-delay percentiles are present (every traced request
+    finished, so none of them can be null);
+  * the paged drain streamed a non-zero number of kernel bytes, and the
+    per-tick series sums to the total;
+  * every gauge's lifetime minimum is >= 0 (pool accounting can never
+    go negative — a negative free/allocated count is a refcount bug);
+  * lifecycle conservation: submitted == finished in the summary AND
+    the event stream's finish events match its submit events 1:1.
+
+Exit code 0 = all invariants hold; any violation raises AssertionError
+(CI fails the step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_metrics(summary: dict) -> None:
+    req = summary["requests"]
+    assert req["submitted"] > 0, "no requests traced"
+    assert req["submitted"] == req["finished"], req
+    lat = summary["latency_s"]
+    for key in ("ttft_s", "tpot_s", "queue_delay_s"):
+        pcts = lat[key]
+        assert pcts["n"] > 0, f"{key}: no samples"
+        for p in ("p50", "p90", "p99"):
+            assert pcts[p] is not None, f"{key}.{p} missing"
+            assert pcts[p] >= 0, f"{key}.{p} negative: {pcts[p]}"
+    sb = summary["streamed_bytes"]
+    assert sb["total"] > 0, "paged drain streamed zero kernel bytes"
+    assert sum(sb["per_tick"]) == sb["total"], (
+        "per-tick streamed bytes do not sum to the total",
+        sum(sb["per_tick"]), sb["total"],
+    )
+    gauges = {
+        name: st for name, st in summary["metrics"].items()
+        if st["type"] == "gauge"
+    }
+    assert gauges, "no gauges in the registry snapshot"
+    for name, st in gauges.items():
+        if st["min"] is not None:
+            assert st["min"] >= 0, f"gauge {name} went negative: {st}"
+    # per-group pool gauges must exist (layer-major pools, DESIGN.md §12)
+    assert any(n.startswith("pool_free_pages{") for n in gauges), (
+        "per-group pool_free_pages gauges missing"
+    )
+
+
+def check_events(lines: list) -> None:
+    events = [json.loads(ln) for ln in lines if ln.strip()]
+    assert events, "event log is empty"
+    seqs = [e["seq"] for e in events]
+    assert seqs == sorted(seqs), "event seq not monotone"
+    by_type: dict = {}
+    for e in events:
+        by_type.setdefault(e["event"], []).append(e)
+    submits = {e["uid"] for e in by_type.get("submit", [])}
+    finishes = {e["uid"] for e in by_type.get("finish", [])}
+    assert submits, "no submit events"
+    assert submits == finishes, (
+        f"lifecycle leak: submitted {sorted(submits)} != "
+        f"finished {sorted(finishes)}"
+    )
+    # every finish carries the traced token count
+    for e in by_type["finish"]:
+        assert e["tokens_out"] >= 1, e
+        assert e["decode_events"] == e["tokens_out"] - 1, e
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", default="results/serve_metrics.json")
+    ap.add_argument("--events", default="results/serve_events.jsonl")
+    args = ap.parse_args()
+    with open(args.metrics) as f:
+        summary = json.load(f)
+    check_metrics(summary)
+    with open(args.events) as f:
+        check_events(f.readlines())
+    print(
+        f"check_metrics: OK — {summary['requests']['finished']} requests, "
+        f"{summary['streamed_bytes']['total']} streamed bytes over "
+        f"{summary['ticks']} ticks, "
+        f"ttft_p50={summary['latency_s']['ttft_s']['p50']:.4f}s"
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -331,6 +331,7 @@ def bucketed_serve_smoke() -> List[Row]:
     from repro.configs.base import ModelConfig
     from repro.kernels import ops
     from repro.models import init_lm
+    from repro.obs import ServeTelemetry
     from repro.serve import ContinuousBatcher, Request
 
     cfg = ModelConfig(
@@ -341,10 +342,14 @@ def bucketed_serve_smoke() -> List[Row]:
     bs, cache_len, prompt_lens = 4, 64, [3, 21, 5, 13]
 
     def drain(strategy):
+        # telemetry does the streamed-page accounting (DESIGN.md §13) —
+        # `account_paged_launch` derives it from the same bucket plans
+        # the dispatch uses, so the bench carries no forked counters
+        tel = ServeTelemetry()
         cb = ContinuousBatcher(
             cfg, params, n_slots=2, cache_len=cache_len, paged=True,
             block_size=bs, kernel_impl="pallas_interpret",
-            bucket_strategy=strategy,
+            bucket_strategy=strategy, telemetry=tel,
         )
         for uid, t in enumerate(prompt_lens):
             p = jax.random.randint(
@@ -354,13 +359,19 @@ def bucketed_serve_smoke() -> List[Row]:
             cb.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
         t0 = time.perf_counter()
         out = cb.run_until_drained()
-        return out, time.perf_counter() - t0
+        return out, time.perf_counter() - t0, tel
 
-    buck, t_buck = drain("pow2")
-    single, t_single = drain("none")
+    buck, t_buck, tel_buck = drain("pow2")
+    single, t_single, tel_single = drain("none")
     assert buck == single, "bucketed serving diverged from single-launch"
-    # the structural win on this trace: pages one decode tick streams
-    # for a ragged 2-slot batch vs the full-depth walk
+    # the structural win, end-to-end: the pow2 drain's telemetry-counted
+    # streamed bytes must undercut the single-launch full-depth walk
+    # ("none" builds no plans, so its accounting IS the full walk)
+    sb_buck = tel_buck.streamed_bytes_total
+    sb_single = tel_single.streamed_bytes_total
+    assert sb_buck < sb_single, (sb_buck, sb_single)
+    # and the per-tick decode quantity, from the shared plan helper:
+    # pages one decode tick streams for a ragged 2-slot batch
     mb = cache_len // bs
     plan, _ = ops.make_bucket_plan([4, 22], bs, mb)
     streamed = ops.plan_streamed_pages(plan, 2, mb)
@@ -368,7 +379,8 @@ def bucketed_serve_smoke() -> List[Row]:
     return [(
         "kernel/bucketed_serve_smoke", t_buck * 1e6,
         f"tokens_equal=True;single_us={t_single * 1e6:.0f};"
-        f"tick_pages={streamed}/{2 * mb}",
+        f"tick_pages={streamed}/{2 * mb};"
+        f"streamed_bytes={sb_buck}/{sb_single}",
     )]
 
 

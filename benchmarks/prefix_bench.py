@@ -67,12 +67,18 @@ def _trace(cfg, n_requests: int, prefix_len: int, max_suffix: int):
 
 def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
            block_size, prefix, window_retirement=True):
+    from repro.obs import ServeTelemetry
     from repro.serve import ContinuousBatcher, Request
 
+    # registry gauges (DESIGN.md §13) now track the same per-tick
+    # peaks as the legacy closure below; the agreement assert at the
+    # end of this function guards one release, after which the
+    # hand-rolled sampling path gets deleted and the gauges stand alone
+    telemetry = ServeTelemetry()
     cb = ContinuousBatcher(
         cfg, params, n_slots=n_slots, cache_len=cache_len,
         paged=True, block_size=block_size, prefix=prefix,
-        window_retirement=window_retirement,
+        window_retirement=window_retirement, telemetry=telemetry,
     )
     for uid, p in enumerate(prompts):
         cb.submit(Request(uid=uid, prompt=p, max_new_tokens=new_tokens))
@@ -106,6 +112,20 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
     t0 = time.perf_counter()
     results = cb.run_until_drained(on_tick=sample)
     dt = time.perf_counter() - t0
+    # double-accounting guard: the registry's gauge maxima must agree
+    # exactly with the legacy closure's hand-rolled peaks (both sample
+    # identical end-of-tick pool state) — this is the one-release
+    # overlap before the closure is deleted
+    reg = telemetry.registry
+    peak_registry = {
+        k: reg.gauge(f"pool_{k}").max
+        for k in ("resident_bytes", "lockstep_equiv_bytes",
+                  "deduped_bytes")
+    }
+    assert peak_registry == peak_resident, (
+        f"registry gauge peaks diverged from legacy on_tick sampling: "
+        f"{peak_registry} != {peak_resident}"
+    )
     stats = {
         "requests": len(results),
         "decode_tokens": sum(len(v) for v in results.values()),
@@ -118,6 +138,12 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
         "cross_layer_peak": peak,
         "cross_layer_final": pc.cross_layer_dedup_stats(),
         "peak_resident": peak_resident,
+        "peak_resident_registry": peak_registry,
+        "latency_s": {
+            k: {p: v[p] for p in ("p50", "p90", "p99", "n")}
+            for k, v in telemetry.latency_summary().items()
+        },
+        "streamed_bytes_total": telemetry.streamed_bytes_total,
     }
     if prefix:
         ix = cb.prefix

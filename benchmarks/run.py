@@ -15,7 +15,9 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
               length-bucketed dispatch raggedness sweep + serve smoke
   reduction/* collective schedule byte models
   roofline/*  per-cell roofline terms from the dry-run artifacts
-  serve/*     continuous-batching throughput, dense vs paged KV cache
+  serve/*     continuous-batching throughput, dense vs paged KV cache,
+              TTFT/TPOT percentiles + streamed-byte telemetry, and the
+              metrics-on/off overhead + bit-exactness guard
   prefix/*    shared-prefix serving, prefix-indexed vs unshared paged
 """
 
@@ -44,7 +46,7 @@ def main() -> None:
     )
     from .prefix_bench import prefix_bench, windowed_prefix_bench
     from .roofline_bench import roofline_bench
-    from .serve_bench import serve_bench
+    from .serve_bench import metrics_overhead_bench, serve_bench
 
     sections = [
         table1_frequency, fig1_scaling, table4_reduction, table5_utilization,
@@ -53,6 +55,7 @@ def main() -> None:
         paged_attention_bench, bucketed_serve_smoke,
         reduction_schedule_bench, roofline_bench,
         serve_bench, prefix_bench, windowed_prefix_bench,
+        metrics_overhead_bench,
     ]
     print("name,us_per_call,derived")
     failures = 0

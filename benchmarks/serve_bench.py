@@ -7,11 +7,22 @@ Drains the same ragged request trace through the scheduler twice:
            prefill AND the decode batch carries padding KV;
   paged  — block-paged cache (DESIGN.md §8), ragged prompts as-is.
 
-Reports tokens/s, scheduler ticks, and page-pool occupancy, and writes
-``results/serve_bench.json`` like the other JSON-emitting benches. Wall
+Reports tokens/s, scheduler ticks, page-pool occupancy, and — via the
+telemetry subsystem (DESIGN.md §13) — TTFT/TPOT/queue-delay
+percentiles, per-group pool gauges, and per-tick streamed-byte
+accounting. Writes ``results/serve_bench.json`` (headline report),
+``results/serve_metrics.json`` (the paged drain's full telemetry
+summary, CI-asserted by ``benchmarks/check_metrics.py``) and
+``results/serve_events.jsonl`` (the structured event stream). Wall
 time on this CPU host is not the TPU story; the structural quantities
-(ticks to drain, prefill tokens processed, occupancy) are
-machine-independent.
+(ticks to drain, prefill tokens processed, streamed bytes, occupancy)
+are machine-independent.
+
+``metrics_overhead_bench`` drains the paged trace twice — telemetry
+attached vs detached — asserts the finished token dicts are
+bit-identical (telemetry must never touch compute), and reports both
+walltimes. The detached drain is also the zero-registry-call contract's
+exercise path (the test suite asserts `mutation_count` stays flat).
 """
 
 from __future__ import annotations
@@ -19,7 +30,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,25 +56,29 @@ def _trace(cfg, n_requests: int, max_len: int):
 
 
 def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
-           paged, block_size, prompt_pad=None):
+           paged, block_size, prompt_pad=None, telemetry=None):
     from repro.serve import ContinuousBatcher, Request
 
     cb = ContinuousBatcher(
         cfg, params, n_slots=n_slots, cache_len=cache_len,
         prompt_len=prompt_pad, paged=paged, block_size=block_size,
+        telemetry=telemetry,
     )
-    occupancy = []
     for uid, p in enumerate(prompts):
         if not paged and prompt_pad is not None:  # pad to the shared length
             p = jnp.pad(p, (prompt_pad - p.shape[0], 0))
         cb.submit(Request(uid=uid, prompt=p, max_new_tokens=new_tokens))
+    occupancy: List[float] = []
+    on_tick = None
+    if paged and telemetry is None:
+        # metrics-off fallback: the one structural series the headline
+        # report still needs (everything else comes from the telemetry)
+        on_tick = lambda b: occupancy.append(b.pcache.slot_occupancy())
     t0 = time.perf_counter()
-    while cb.queue or any(s is not None for s in cb.slots):
-        cb.step()
-        if paged:
-            occupancy.append(cb.pcache.slot_occupancy())
+    results = cb.run_until_drained(on_tick=on_tick)
     dt = time.perf_counter() - t0
-    results = cb.finished
+    if paged and telemetry is not None:
+        occupancy = telemetry.tick_occupancy
     out_tokens = sum(len(v) for v in results.values())
     stats = {
         "requests": len(results),
@@ -75,15 +90,28 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
         "wall_s": round(dt, 3),
         "tok_per_s": round(out_tokens / dt, 2),
     }
-    if paged:
+    if paged and occupancy:
         stats["mean_occupancy"] = round(sum(occupancy) / len(occupancy), 3)
         stats["peak_occupancy"] = round(max(occupancy), 3)
-    return stats
+    if telemetry is not None:
+        lat = telemetry.latency_summary()
+        stats["latency_s"] = {
+            k: {p: lat[k][p] for p in ("p50", "p90", "p99", "n")}
+            for k in ("ttft_s", "tpot_s", "queue_delay_s")
+        }
+        if paged:
+            stats["streamed_bytes_total"] = telemetry.streamed_bytes_total
+            stats["per_tick_streamed_bytes"] = list(
+                telemetry.tick_streamed_bytes
+            )
+            stats["pool_gauges"] = cb.pcache.pool_gauges()
+    return stats, results, cb
 
 
 def serve_bench() -> List[Row]:
     from repro.configs import get_config
     from repro.models import init_lm
+    from repro.obs import ServeTelemetry
 
     cfg = get_config("qwen2-1.5b", smoke=True)
     params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -91,15 +119,20 @@ def serve_bench() -> List[Row]:
     lens, prompts = _trace(cfg, n_requests, max_prompt)
     cache_len = max_prompt + new_tokens + 2
 
-    dense = _drain(
+    os.makedirs("results", exist_ok=True)
+    dense, _, _ = _drain(
         cfg, params, prompts, n_slots=n_slots, cache_len=cache_len,
         new_tokens=new_tokens, paged=False, block_size=0,
-        prompt_pad=max_prompt,
+        prompt_pad=max_prompt, telemetry=ServeTelemetry(),
     )
-    paged = _drain(
+    tel = ServeTelemetry(
+        events_path=os.path.join("results", "serve_events.jsonl")
+    )
+    paged, _, _ = _drain(
         cfg, params, prompts, n_slots=n_slots, cache_len=cache_len,
-        new_tokens=new_tokens, paged=True, block_size=4,
+        new_tokens=new_tokens, paged=True, block_size=4, telemetry=tel,
     )
+    tel.close()
 
     report = {
         "trace": {"n_requests": n_requests, "prompt_lens": lens,
@@ -110,9 +143,12 @@ def serve_bench() -> List[Row]:
             1.0 - paged["prefill_tokens"] / dense["prefill_tokens"], 3
         ),
     }
-    os.makedirs("results", exist_ok=True)
     with open(os.path.join("results", "serve_bench.json"), "w") as f:
         json.dump(report, f, indent=1)
+    # the full telemetry summary (registry snapshot included) — the
+    # artifact benchmarks/check_metrics.py asserts invariants on in CI
+    with open(os.path.join("results", "serve_metrics.json"), "w") as f:
+        json.dump(tel.summary(), f, indent=1)
 
     rows: List[Row] = []
     for mode, st in (("dense", dense), ("paged", paged)):
@@ -128,10 +164,58 @@ def serve_bench() -> List[Row]:
         "serve/prefill_padding_waste", 0.0,
         f"dense_pads={report['prefill_padding_waste']:.0%} of prompt tokens",
     ))
+    ttft, tpot = paged["latency_s"]["ttft_s"], paged["latency_s"]["tpot_s"]
+    rows.append((
+        "serve/paged_latency", 0.0,
+        f"ttft_p50={ttft['p50']:.4f};ttft_p99={ttft['p99']:.4f};"
+        f"tpot_p50={tpot['p50']:.4f};tpot_p99={tpot['p99']:.4f}",
+    ))
+    rows.append((
+        "serve/paged_streamed_bytes", 0.0,
+        f"total={paged['streamed_bytes_total']};"
+        f"ticks_sampled={len(paged['per_tick_streamed_bytes'])}",
+    ))
     return rows
+
+
+def metrics_overhead_bench() -> List[Row]:
+    """Telemetry-attached vs detached drain of the SAME paged trace:
+    tokens must be bit-exact (telemetry never touches compute); both
+    walltimes are reported so overhead regressions are visible. No
+    wall-clock bound is asserted — CPU-host noise would flake it — the
+    structural overhead contract (zero registry calls when off) is
+    asserted in tests/test_obs.py instead."""
+    from repro.configs import get_config
+    from repro.models import init_lm
+    from repro.obs import ServeTelemetry
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    n_requests, max_prompt, new_tokens, n_slots = 8, 16, 6, 3
+    _, prompts = _trace(cfg, n_requests, max_prompt)
+    cache_len = max_prompt + new_tokens + 2
+    kw = dict(n_slots=n_slots, cache_len=cache_len,
+              new_tokens=new_tokens, paged=True, block_size=4)
+
+    off_stats, off_results, _ = _drain(cfg, params, prompts, **kw)
+    tel = ServeTelemetry()
+    on_stats, on_results, _ = _drain(
+        cfg, params, prompts, telemetry=tel, **kw
+    )
+    assert on_results == off_results, (
+        "telemetry changed generated tokens — it must be observation-only"
+    )
+    n_events = len(tel.events)
+    return [(
+        "serve/metrics_overhead", on_stats["wall_s"] * 1e6,
+        f"off_wall_s={off_stats['wall_s']};on_wall_s={on_stats['wall_s']};"
+        f"tokens_bit_exact=True;events={n_events}",
+    )]
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
     for name, us, derived in serve_bench():
+        print(f"{name},{us:.1f},{derived}")
+    for name, us, derived in metrics_overhead_bench():
         print(f"{name},{us:.1f},{derived}")

@@ -36,8 +36,23 @@ tokens, far fewer prefill tokens and page draws):
     cb = ContinuousBatcher(cfg, params, n_slots=4, cache_len=64,
                            paged=True, block_size=16, prefix=True)
 
+Telemetry (DESIGN.md §13): attach a `ServeTelemetry` to trace the
+request lifecycle (TTFT/TPOT/queue-delay percentiles), per-tick pool
+gauges, and per-launch streamed-byte accounting — observation only,
+tokens are bit-identical and the default telemetry=None path makes
+zero registry calls:
+
+    from repro.obs import ServeTelemetry
+    tel = ServeTelemetry(events_path="events.jsonl")
+    cb = ContinuousBatcher(cfg, params, n_slots=4, cache_len=64,
+                           paged=True, block_size=16, telemetry=tel)
+    ...
+    cb.run_until_drained()
+    tel.latency_summary()["ttft_s"]["p99"]   # exact percentiles
+    tel.registry.prometheus()                # text snapshot
+
 CLI:  PYTHONPATH=src python -m repro.launch.serve --paged --quantize
-      PYTHONPATH=src python -m repro.launch.serve --paged --prefix
+      PYTHONPATH=src python -m repro.launch.serve --paged --prefix --metrics
 Bench: PYTHONPATH=src python -m benchmarks.serve_bench   (dense vs paged)
        PYTHONPATH=src python -m benchmarks.prefix_bench  (shared prefix)
 """

@@ -163,6 +163,24 @@ def plan_streamed_pages(
     return sum(bound * count for bound, count in plan)
 
 
+def grouped_streamed_pages(
+    plans, n_slots: int, table_width: int, n_groups: int = 1
+):
+    """Per-group `plan_streamed_pages` for one layer-major dispatch —
+    the telemetry layer's structural streamed-page accounting. `plans`
+    is the same static half `bucket_args_grouped` returned: a tuple of
+    per-group plans (entries may be None), a single plan, or None for
+    the everywhere-single-launch path (full-depth walk in every
+    group)."""
+    if plans is None:
+        return [n_slots * table_width] * n_groups
+    if is_bucket_plan(plans):
+        plans = (plans,) * n_groups
+    return [
+        plan_streamed_pages(p, n_slots, table_width) for p in plans
+    ]
+
+
 def bucket_args(
     strategy: str,
     kernel_impl: str,

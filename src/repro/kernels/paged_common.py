@@ -164,7 +164,13 @@ def bucketed_page_dispatch(launch, plan, perm, block_table, slot_operands):
     outs, off = [], 0
     for bound, count in plan:
         idx = jax.lax.slice_in_dim(perm, off, off + count)
-        outs.append(launch(bound, bt_ext[idx], *[o[idx] for o in ops_ext]))
+        # trace-time scope: tags the bucket launch's ops in HLO metadata
+        # so profiles attribute streamed pages per bucket (free when no
+        # profiler is attached — it only renames metadata)
+        with jax.named_scope(f"paged_bucket_d{bound}x{count}"):
+            outs.append(
+                launch(bound, bt_ext[idx], *[o[idx] for o in ops_ext])
+            )
         off += count
     res = jnp.concatenate(outs, axis=0)
     out_full = jnp.zeros((b + 1,) + res.shape[1:], res.dtype)

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config
 from ..models import init_lm
+from ..obs import ServeTelemetry
 from ..quant.bitplane import PimQuantConfig
 from ..serve import ContinuousBatcher, Request, ServeConfig, ServeEngine
 
@@ -74,6 +75,17 @@ def main():
                     help="disable sliding-window page retirement "
                          "(DESIGN.md §12) — the lockstep-residency "
                          "baseline; tokens are identical either way")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach the serving telemetry (DESIGN.md §13): "
+                         "request-lifecycle traces, per-tick pool/kernel "
+                         "gauges, TTFT/TPOT percentiles; prints the run "
+                         "summary and a Prometheus-style snapshot")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="stream the structured JSON-lines event log to "
+                         "PATH (implies --metrics)")
+    ap.add_argument("--profile-annotations", action="store_true",
+                    help="wrap compiled steps in jax.profiler trace "
+                         "annotations / named scopes (implies --metrics)")
     args = ap.parse_args()
     if args.prefix and not args.paged:
         ap.error("--prefix requires --paged (the prefix index shares "
@@ -89,6 +101,13 @@ def main():
         print(f"PIM-quantized: {frac:.1%} of param bytes packed "
               f"({args.bits}-bit, group={args.group})")
 
+    telemetry = None
+    if args.metrics or args.events_out or args.profile_annotations:
+        telemetry = ServeTelemetry(
+            events_path=args.events_out,
+            profile=args.profile_annotations,
+        )
+
     shared_len = args.shared_prefix_len if args.prefix else 0
     cache_len = shared_len + args.prompt_len + args.new_tokens + 8
     batcher = ContinuousBatcher(
@@ -98,6 +117,7 @@ def main():
         eos_token=args.eos, kernel_impl=args.kernel_impl,
         bucket_strategy=args.bucket_strategy,
         window_retirement=not args.no_window_retirement,
+        telemetry=telemetry,
     )
     key = jax.random.PRNGKey(1)
     shared = jax.random.randint(
@@ -143,6 +163,24 @@ def main():
               f"{len(ix)} pages indexed")
     for uid in sorted(results)[:3]:
         print(f"  req {uid}: {results[uid]}")
+    if telemetry is not None:
+        lat = telemetry.latency_summary()
+        print("  telemetry (DESIGN.md §13):")
+        for k in ("ttft_s", "tpot_s", "queue_delay_s"):
+            s = lat[k]
+            if s["n"]:
+                print(f"    {k}: p50={s['p50']:.4f} p90={s['p90']:.4f} "
+                      f"p99={s['p99']:.4f} (n={s['n']})")
+        sb = telemetry.streamed_bytes_total
+        print(f"    kernel streamed bytes: {sb} "
+              f"({len(telemetry.tick_streamed_bytes)} ticks sampled), "
+              f"{len(telemetry.events)} events")
+        print("  --- prometheus snapshot ---")
+        print("  " + telemetry.registry.prometheus().rstrip()
+              .replace("\n", "\n  "))
+        telemetry.close()
+        if args.events_out:
+            print(f"  events written to {args.events_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""Serving observability: metrics registry, event log, lifecycle tracing.
+
+See DESIGN.md §13 for the metric/event schema and naming conventions.
+"""
+
+from .events import EventLog
+from .metrics import (
+    DEFAULT_LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    ManualClock,
+    MetricsRegistry,
+    exponential_buckets,
+    mutation_count,
+)
+from .tracing import RequestTrace, ServeTelemetry
+
+__all__ = [
+    "Counter",
+    "DEFAULT_LATENCY_BUCKETS",
+    "EventLog",
+    "Gauge",
+    "Histogram",
+    "ManualClock",
+    "MetricsRegistry",
+    "RequestTrace",
+    "ServeTelemetry",
+    "exponential_buckets",
+    "mutation_count",
+]

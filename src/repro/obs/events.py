@@ -1,0 +1,64 @@
+"""Structured JSON-lines event log (DESIGN.md §13).
+
+One event = one dict with a monotone `seq`, a clock timestamp `ts`, an
+`event` type string, and arbitrary JSON-able payload fields. Events are
+kept in memory (the tests and run summaries read them back) and,
+when a path is given, streamed to a JSON-lines file as they happen —
+a crashed run still leaves every event up to the crash on disk.
+
+Event types the serving stack emits (schema in DESIGN.md §13):
+`submit`, `admit`, `prefill`, `first_token`, `decode`, `finish`,
+`deadlock`. The log is intentionally dumb: no levels, no filtering —
+whoever attaches a telemetry object has opted into the full stream.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional
+
+
+class EventLog:
+    def __init__(self, path: Optional[str] = None, clock=None,
+                 keep_in_memory: bool = True):
+        self.clock = clock if clock is not None else time.monotonic
+        self.path = path
+        self.events: List[Dict[str, object]] = []
+        self._keep = keep_in_memory
+        self._fh = open(path, "w") if path else None
+        self._seq = 0
+
+    def emit(self, event: str, **fields) -> Dict[str, object]:
+        ev: Dict[str, object] = {
+            "seq": self._seq, "ts": round(float(self.clock()), 6),
+            "event": event,
+        }
+        ev.update(fields)
+        self._seq += 1
+        if self._keep:
+            self.events.append(ev)
+        if self._fh is not None:
+            self._fh.write(json.dumps(ev) + "\n")
+        return ev
+
+    def of(self, event: str) -> List[Dict[str, object]]:
+        return [e for e in self.events if e["event"] == event]
+
+    def __len__(self) -> int:
+        return self._seq
+
+    def flush(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "EventLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

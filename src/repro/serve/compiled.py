@@ -20,6 +20,15 @@ cache, and the power-of-two rounding in `kernels.ops.make_bucket_plan`
 bounds how many combinations can ever exist. `plans=None` (the default)
 is the everywhere-single-launch path and compiles exactly the PR-3
 program.
+
+`annotate=True` (DESIGN.md §13) adds profiler visibility at zero cost
+to the metrics-off path (it is a separate factory call, not a runtime
+branch): the traced program is wrapped in `jax.named_scope`, which tags
+every op's HLO metadata with the step name, and each compiled call runs
+under `jax.profiler.TraceAnnotation`, which brackets the host-side
+dispatch in the profiler timeline. Combined with the per-bucket
+`named_scope` in `kernels.paged_common.bucketed_page_dispatch`, a
+profile shows exactly which bucket launch streamed what.
 """
 
 from __future__ import annotations
@@ -30,30 +39,63 @@ from ..configs.base import ModelConfig
 from ..models import decode_step_paged, prefill_paged
 
 
-def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto"):
+def _annotated(jitted, scope: str):
+    """Wrap a compiled step so each dispatch lands in the profiler
+    timeline under `scope`. Keeps the jitted callable's signature
+    (positional + `perms`/`plans` keywords) intact."""
+
+    def wrapped(*args, perms=None, plans=None):
+        with jax.profiler.TraceAnnotation(scope):
+            return jitted(*args, perms=perms, plans=plans)
+
+    return wrapped
+
+
+def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto",
+                      annotate: bool = False):
     """(params, toks, k_pages, v_pages, block_tables, block_starts,
     start, total, last_pos[, perms], plans=...) ->
     (logits, k_pages, v_pages). Retraces once per (padded suffix-length
     bucket, plan combination) pair."""
 
     def fn(p, toks, kp, vp, bt, st, strt, tot, lp, perms=None, plans=None):
+        if annotate:
+            with jax.named_scope("serve/paged_prefill"):
+                return prefill_paged(
+                    p, toks, kp, vp, bt, strt, tot, cfg, last_pos=lp,
+                    impl=impl, bucket_plan=plans, bucket_perm=perms,
+                    block_start=st,
+                )
         return prefill_paged(
             p, toks, kp, vp, bt, strt, tot, cfg, last_pos=lp, impl=impl,
             bucket_plan=plans, bucket_perm=perms, block_start=st,
         )
 
-    return jax.jit(fn, static_argnames=("plans",))
+    jitted = jax.jit(fn, static_argnames=("plans",))
+    if annotate:
+        return _annotated(jitted, "serve/paged_prefill")
+    return jitted
 
 
-def jit_paged_decode(cfg: ModelConfig, impl: str = "auto"):
+def jit_paged_decode(cfg: ModelConfig, impl: str = "auto",
+                     annotate: bool = False):
     """(params, token, k_pages, v_pages, block_tables, block_starts,
     positions[, perms], plans=...) -> (logits, k_pages, v_pages).
     Retraces once per plan combination."""
 
     def fn(p, t, kp, vp, bt, st, pos, perms=None, plans=None):
+        if annotate:
+            with jax.named_scope("serve/paged_decode"):
+                return decode_step_paged(
+                    p, t, kp, vp, bt, pos, cfg, impl=impl,
+                    bucket_plan=plans, bucket_perm=perms, block_start=st,
+                )
         return decode_step_paged(
             p, t, kp, vp, bt, pos, cfg, impl=impl,
             bucket_plan=plans, bucket_perm=perms, block_start=st,
         )
 
-    return jax.jit(fn, static_argnames=("plans",))
+    jitted = jax.jit(fn, static_argnames=("plans",))
+    if annotate:
+        return _annotated(jitted, "serve/paged_decode")
+    return jitted

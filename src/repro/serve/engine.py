@@ -39,6 +39,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..kernels.ops import bucket_args_grouped, resolve_bucket_strategy
 from ..models import decode_step, init_cache, prefill
+from ..obs import ServeTelemetry
 from ..quant.bitplane import PimQuantConfig, quantize_tree, tree_packed_fraction
 from .compiled import jit_paged_decode, jit_paged_prefill
 from .paged_cache import PagedKVCache
@@ -60,20 +61,42 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig,
+                 telemetry: Optional[ServeTelemetry] = None):
         self.cfg = cfg
         self.sc = serve_cfg
         self.params = params
         self.packed_fraction = 0.0
+        #: observability facade (DESIGN.md §13); None = metrics off,
+        #: every hook site guards on it (zero registry calls on the
+        #: uninstrumented path)
+        self.telemetry = telemetry
+        #: monotone uid base so rows of successive generate() calls get
+        #: distinct trace uids
+        self._uid_base = 0
+        annotate = telemetry is not None and telemetry.profile
         self._prefill = jax.jit(
             lambda p, t: prefill(p, t, cfg, cache_len=serve_cfg.max_cache_len)
         )
         self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
-        self._decode_paged = jit_paged_decode(cfg, impl=serve_cfg.kernel_impl)
+        self._decode_paged = jit_paged_decode(
+            cfg, impl=serve_cfg.kernel_impl, annotate=annotate
+        )
         self._prefill_paged = jit_paged_prefill(
-            cfg, impl=serve_cfg.kernel_impl
+            cfg, impl=serve_cfg.kernel_impl, annotate=annotate
         )
         resolve_bucket_strategy(serve_cfg.bucket_strategy)
+
+    def _trace_admit(self, b: int, prompt_tokens: int) -> list:
+        """Open one trace per batch row (the engine's generate() admits
+        the whole batch at once — submit and admit coincide)."""
+        uids = list(range(self._uid_base, self._uid_base + b))
+        self._uid_base += b
+        tel = self.telemetry
+        for slot, uid in enumerate(uids):
+            tel.on_submit(uid, prompt_tokens, self.sc.max_new_tokens)
+            tel.on_admit(uid, slot)
+        return uids
 
     def quantize(self, qcfg: Optional[PimQuantConfig] = None) -> float:
         """Convert projection weights to PIM-resident bit-planes."""
@@ -110,18 +133,34 @@ class ServeEngine:
         if self.sc.paged:
             return self._generate_paged(prompts, rng)
         b, t = prompts.shape
+        tel = self.telemetry
+        uids = self._trace_admit(b, t) if tel is not None else None
         logits, cache = self._prefill(self.params, prompts)
         out = []
         done = np.zeros((b,), bool)
         tok = self._sample(logits[:, -1], rng)
+        if tel is not None:
+            for uid in uids:
+                tel.on_prefill(uid, t)
+                tel.on_first_token(uid)
         for i in range(self.sc.max_new_tokens):
             tok = self._pad_done(tok, done)
             out.append(tok)
-            done = done | self._eos_hits(tok)
+            newly = ~done & self._eos_hits(tok)
+            done = done | newly
+            if tel is not None:
+                for r in np.flatnonzero(newly):
+                    tel.on_finish(uids[r])
             if done.all() or i == self.sc.max_new_tokens - 1:
                 break  # the last appended token needs no follow-up decode
             logits, cache = self._decode(self.params, tok, cache)
+            if tel is not None:
+                tel.on_decode([uids[r] for r in np.flatnonzero(~done)])
+                tel.end_tick(0, int((~done).sum()))
             tok = self._sample(logits[:, -1], rng)
+        if tel is not None:
+            for r in np.flatnonzero(~done):
+                tel.on_finish(uids[r])  # budget-finished rows
         return jnp.concatenate(out, axis=-1)
 
     def _generate_paged(
@@ -133,6 +172,8 @@ class ServeEngine:
         prompt KV, which the old path paid per generate call."""
         b, t = prompts.shape
         bs = self.sc.block_size
+        tel = self.telemetry
+        uids = self._trace_admit(b, t) if tel is not None else None
         pc = PagedKVCache(
             self.cfg, n_slots=b, max_len=self.sc.max_cache_len,
             block_size=bs,
@@ -143,6 +184,8 @@ class ServeEngine:
         toks = jnp.pad(prompts, ((0, 0), (0, pad - t)))
         zeros = jnp.zeros((b,), jnp.int32)
         plans, perms = self._bucket_args(pc, np.full((b,), t))
+        if tel is not None:
+            tel.account_paged_launch("prefill", plans, b, pc)
         logits, pc.k_pages, pc.v_pages = self._prefill_paged(
             self.params, toks, pc.k_pages, pc.v_pages,
             pc.device_block_tables(), pc.device_block_starts(),
@@ -153,6 +196,10 @@ class ServeEngine:
         out = []
         done = np.zeros((b,), bool)
         tok = self._sample(logits[:, -1], rng)
+        if tel is not None:
+            for uid in uids:
+                tel.on_prefill(uid, pad)
+                tel.on_first_token(uid)
         for it in range(self.sc.max_new_tokens):
             tok = self._pad_done(tok, done)
             out.append(tok)
@@ -161,6 +208,8 @@ class ServeEngine:
                 # falls back to scratch, which absorbs later KV scatters
                 pc.free_slot(int(i))
                 done[i] = True
+                if tel is not None:
+                    tel.on_finish(uids[i])
             if done.all() or it == self.sc.max_new_tokens - 1:
                 break  # the last appended token needs no follow-up decode
             for i in range(b):
@@ -169,6 +218,8 @@ class ServeEngine:
                     # window-dead blocks per layer group (DESIGN.md §12)
                     pc.begin_append(i, int(pc.lengths[i]), 1)
             plans, perms = self._bucket_args(pc, pc.lengths + 1)
+            if tel is not None:
+                tel.account_paged_launch("decode", plans, b, pc)
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, tok, pc.k_pages, pc.v_pages,
                 pc.device_block_tables(), pc.device_block_starts(),
@@ -177,7 +228,18 @@ class ServeEngine:
             for i in range(b):
                 if not done[i]:
                     pc.lengths[i] += 1
+            if tel is not None:
+                tel.on_decode([uids[r] for r in np.flatnonzero(~done)])
+                tel.end_tick(
+                    0, int((~done).sum()),
+                    pool_gauges=pc.pool_gauges(),
+                    dedup=pc.cross_layer_dedup_stats(),
+                    occupancy=pc.slot_occupancy(),
+                )
             tok = self._sample(logits[:, -1], rng)
+        if tel is not None:
+            for r in np.flatnonzero(~done):
+                tel.on_finish(uids[r])  # budget-finished rows
         return jnp.concatenate(out, axis=-1)
 
     def _bucket_args(self, pc: PagedKVCache, eff_lengths):

@@ -722,6 +722,24 @@ class PagedKVCache:
         deadlock detector compares across ticks."""
         return tuple(p.n_free for p in self.pools)
 
+    def pool_gauges(self) -> List[Dict[str, object]]:
+        """Per-group gauge sample for the telemetry layer (DESIGN.md
+        §13): one dict per pool, keys matching the `pool_*{group=g}`
+        metric family."""
+        return [
+            {
+                "gid": p.gid,
+                "free_pages": p.n_free,
+                "unreserved_pages": p.available_blocks(),
+                "allocated_pages": p.allocated_pages(),
+                "shared_refs": p.extra_refs(),
+                "cow_events": p.cow_events,
+                "pages_retired": p.pages_retired,
+                "pages_allocated_total": p.pages_allocated,
+            }
+            for p in self.pools
+        ]
+
     # -- bucketed dispatch inputs (DESIGN.md §11-§12) ----------------------
 
     def bucket_needs(self, eff_lengths,

@@ -99,6 +99,18 @@ class PrefixIndex:
         """Max pages the index may retain in EACH group's pool."""
         return int(self.max_retained_fraction * (cache.n_blocks - 1))
 
+    def stats(self) -> Dict[str, int]:
+        """Gauge sample for the telemetry layer (`pool_prefix_*`,
+        DESIGN.md §13)."""
+        return {
+            "retained_pages": self.retained_pages,
+            "nodes": len(self),
+            "hits": self.hits,
+            "lookups": self.lookups,
+            "cached_tokens_served": self.cached_tokens_served,
+            "evicted_pages": self.evicted_pages,
+        }
+
     # -- helpers -----------------------------------------------------------
 
     def block_keys(self, tokens) -> List[Tuple[int, ...]]:

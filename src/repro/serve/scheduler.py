@@ -64,6 +64,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..kernels.ops import bucket_args_grouped, resolve_bucket_strategy
 from ..models import decode_step, init_cache, prefill
+from ..obs import ServeTelemetry
 from .compiled import jit_paged_decode, jit_paged_prefill
 from .paged_cache import PagedKVCache
 from .prefix_cache import PrefixIndex
@@ -121,6 +122,7 @@ class ContinuousBatcher:
         bucket_strategy: str = "pow2",
         prefix_max_retained_fraction: float = 1.0,
         window_retirement: bool = True,
+        telemetry: Optional[ServeTelemetry] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -142,6 +144,11 @@ class ContinuousBatcher:
         #: -1 = never stop early; >= 0 = a slot that emits this token
         #: finishes immediately and frees its pages the same tick
         self.eos_token = eos_token
+        #: observability facade (DESIGN.md §13). None (default) is the
+        #: metrics-OFF contract: every instrumentation site below guards
+        #: on it, so an uninstrumented drain makes ZERO registry calls
+        #: on the hot path (asserted via obs.metrics.mutation_count)
+        self.telemetry = telemetry
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
@@ -159,17 +166,22 @@ class ContinuousBatcher:
             )
             if prefix else None
         )
+        annotate = telemetry is not None and telemetry.profile
         if paged:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
                 n_blocks=n_blocks, window_retirement=window_retirement,
             )
             self.cache = None
-            self._decode_paged = jit_paged_decode(cfg, impl=kernel_impl)
+            self._decode_paged = jit_paged_decode(
+                cfg, impl=kernel_impl, annotate=annotate
+            )
             # suffixes are right-padded to a block-size multiple, so this
             # retraces once per bucket and `last_pos` selects the true
             # suffix end dynamically
-            self._prefill_paged = jit_paged_prefill(cfg, impl=kernel_impl)
+            self._prefill_paged = jit_paged_prefill(
+                cfg, impl=kernel_impl, annotate=annotate
+            )
         else:
             self.pcache = None
             self.cache = init_cache(cfg, n_slots, cache_len)
@@ -180,6 +192,10 @@ class ContinuousBatcher:
 
     def submit(self, req: Request):
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.on_submit(
+                req.uid, int(req.prompt.shape[0]), req.max_new_tokens
+            )
 
     # -- prefill -----------------------------------------------------------
 
@@ -275,9 +291,14 @@ class ContinuousBatcher:
         return None
 
     def _prefill_into_dense(self, i: int, req: Request):
+        if self.telemetry is not None:
+            self.telemetry.on_admit(req.uid, i)
         logits, c1 = self._prefill_dense(self.params, req.prompt[None, :])
         self.cache = _insert_batch(self.cache, c1, i)
-        self.prefill_tokens += int(req.prompt.shape[0])
+        t = int(req.prompt.shape[0])
+        self.prefill_tokens += t
+        if self.telemetry is not None:
+            self.telemetry.on_prefill(req.uid, t)
         self._start_slot(i, req, logits)
 
     def _prefill_into_paged(
@@ -291,6 +312,8 @@ class ContinuousBatcher:
         pc = self.pcache
         t = int(req.prompt.shape[0])
         bs = pc.block_size
+        if self.telemetry is not None:
+            self.telemetry.on_admit(req.uid, i, n_cached)
         if attach_plan is not None:
             pc.attach_chain(i, attach_plan)
         ns = t - n_cached
@@ -315,6 +338,10 @@ class ContinuousBatcher:
         )
         pc.lengths[i] = t
         self.prefill_tokens += pad
+        if self.telemetry is not None:
+            self.telemetry.on_prefill(req.uid, pad)
+            # one-slot launch: n_rows=1 (the table snapshot was sliced)
+            self.telemetry.account_paged_launch("prefill", plans, 1, pc)
         if self.prefix is not None:
             self.prefix.lookups += 1
             self.prefix.hits += bool(n_cached)
@@ -328,6 +355,8 @@ class ContinuousBatcher:
     def _start_slot(self, i: int, req: Request, logits):
         nxt = int(jnp.argmax(logits[0, -1]))
         req.generated.append(nxt)
+        if self.telemetry is not None:
+            self.telemetry.on_first_token(req.uid)
         if req.done or self._hit_eos(nxt):
             # the prefill token completes the request (max_new_tokens == 1,
             # or the prompt's continuation is EOS) — entering decode would
@@ -336,6 +365,8 @@ class ContinuousBatcher:
             self.finished[req.uid] = req.generated
             if self.paged:
                 self.pcache.free_slot(i)
+            if self.telemetry is not None:
+                self.telemetry.on_finish(req.uid)
             return
         self.tokens = self.tokens.at[i, 0].set(nxt)
         self.slots[i] = req
@@ -353,12 +384,16 @@ class ContinuousBatcher:
                 # prefill-only tick: every admitted request completed AT
                 # prefill (same-slot retry) — real work, count the tick
                 self.ticks += 1
+            if self.telemetry is not None:
+                self._sample_tick()
             return 0
         if self.paged:
             nxt = self._step_paged(active)
         else:
             logits, self.cache = self._decode(self.params, self.tokens, self.cache)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if self.telemetry is not None:
+            self.telemetry.on_decode([self.slots[i].uid for i in active])
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
@@ -370,9 +405,32 @@ class ContinuousBatcher:
                 if self.paged:
                     self.pcache.free_slot(i)
                 self.slots[i] = None
+                if self.telemetry is not None:
+                    self.telemetry.on_finish(req.uid)
         self.tokens = nxt[:, None]
         self.ticks += 1
+        if self.telemetry is not None:
+            self._sample_tick()
         return len(active)
+
+    def _sample_tick(self):
+        """End-of-tick gauge sample (telemetry attached only): queue
+        depth, active slots, per-group pool state, dedup bytes, prefix
+        index — everything the per-tick series and peak gauges need."""
+        tel = self.telemetry
+        queued = len(self.queue)
+        active = sum(s is not None for s in self.slots)
+        if not self.paged:
+            tel.end_tick(queued, active)
+            return
+        pc = self.pcache
+        tel.end_tick(
+            queued, active,
+            pool_gauges=pc.pool_gauges(),
+            dedup=pc.cross_layer_dedup_stats(),
+            occupancy=pc.slot_occupancy(),
+            prefix=None if self.prefix is None else self.prefix.stats(),
+        )
 
     def _bucket_args(self, eff_lengths, slots=None):
         """Per-group slot→bucket packing for one launch (DESIGN.md
@@ -394,6 +452,10 @@ class ContinuousBatcher:
         # this decode attends over position + 1 kv rows per slot (idle
         # slots: 1 scratch row) — bucket the batch by that occupancy
         plans, perms = self._bucket_args(pc.lengths + 1)
+        if self.telemetry is not None:
+            self.telemetry.account_paged_launch(
+                "decode", plans, self.n_slots, pc
+            )
         logits, pc.k_pages, pc.v_pages = self._decode_paged(
             self.params, self.tokens, pc.k_pages, pc.v_pages,
             pc.device_block_tables(), pc.device_block_starts(),
@@ -458,13 +520,23 @@ class ContinuousBatcher:
                 and (not self.paged
                      or self.pcache.free_state() == free_before)
             ):
+                diagnostic = self._pool_diagnostic()
+                if self.telemetry is not None:
+                    # machine-readable twin of the exception message —
+                    # the raise below keeps its wording untouched
+                    self.telemetry.on_deadlock(
+                        ticks, len(self.queue), len(self.finished),
+                        {p.gid: p.n_free for p in self.pcache.pools}
+                        if self.paged else {},
+                        diagnostic,
+                    )
                 raise RuntimeError(
                     f"run_until_drained: deadlock at tick {ticks} — no "
                     f"slot is active and none of the {len(self.queue)} "
                     f"queued requests is admissible, so no future tick "
                     f"can free pages or make progress "
                     f"({len(self.finished)} finished)"
-                    f"{self._pool_diagnostic()}"
+                    f"{diagnostic}"
                 )
         pending = len(self.queue) + sum(s is not None for s in self.slots)
         if pending:
