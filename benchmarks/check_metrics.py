@@ -14,7 +14,10 @@ Asserts the DESIGN.md §13 invariants the smoke job publishes:
   * every gauge's lifetime minimum is >= 0 (pool accounting can never
     go negative — a negative free/allocated count is a refcount bug);
   * lifecycle conservation: submitted == finished in the summary AND
-    the event stream's finish events match its submit events 1:1.
+    the event stream's finish events match its submit events 1:1;
+  * the event stream ends with the terminal ``run_end`` record
+    (EventLog.close()) whose per-type tally matches the lines on disk —
+    a truncated or crashed-run file fails here (DESIGN.md §14).
 
 Exit code 0 = all invariants hold; any violation raises AssertionError
 (CI fails the step).
@@ -77,6 +80,25 @@ def check_events(lines: list) -> None:
     for e in by_type["finish"]:
         assert e["tokens_out"] >= 1, e
         assert e["decode_events"] == e["tokens_out"] - 1, e
+    # terminal run_end (DESIGN.md §14): the last line must be the
+    # run_end record EventLog.close() appends, and its tally must match
+    # the lines that made it to disk — either failing means the stream
+    # was truncated (crashed run or lost buffered tail)
+    terminal = events[-1]
+    assert terminal["event"] == "run_end", (
+        "event stream truncated: terminal run_end record missing"
+    )
+    assert terminal["events"] == len(events) - 1, (
+        "event stream truncated: run_end counted "
+        f"{terminal['events']} events but {len(events) - 1} are on disk"
+    )
+    tally = {}
+    for e in events[:-1]:
+        tally[e["event"]] = tally.get(e["event"], 0) + 1
+    assert terminal["by_type"] == tally, (
+        "event stream truncated: run_end tally disagrees with disk",
+        terminal["by_type"], tally,
+    )
 
 
 def main() -> None:

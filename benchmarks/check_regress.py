@@ -1,0 +1,88 @@
+"""CI perf regression gate over the bench results (DESIGN.md §14).
+
+Run after the bench suite has written ``results/*.json``:
+
+    python benchmarks/check_regress.py
+        [--results results] [--baselines benchmarks/baselines.json]
+        [--history results/history.jsonl] [--no-append] [--pin]
+
+Normal mode: collect the headline structural metrics from the results
+directory (``repro.obs.regress.HEADLINE_SPECS`` — streamed bytes, token
+parity counts, model-error stats; never walltimes), append one
+normalized record (git sha, UTC timestamp, config hash) to the history
+file, then diff against the pinned baselines under their per-metric
+tolerance bands. Any violation prints and exits nonzero — CI fails.
+
+``--pin`` re-pins ``baselines.json`` from the current results instead
+of diffing: the deliberate act after an ACCEPTED perf change (improved
+numbers also warrant a re-pin so the gate tracks the new level).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+)
+
+from repro.obs import regress  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--baselines", default="benchmarks/baselines.json")
+    ap.add_argument("--history", default="results/history.jsonl")
+    ap.add_argument("--no-append", action="store_true",
+                    help="diff only; do not append to the history file")
+    ap.add_argument("--pin", action="store_true",
+                    help="re-pin baselines.json from the current results")
+    args = ap.parse_args(argv)
+
+    if args.pin:
+        blob = regress.pin_baselines(args.baselines, args.results)
+        print(f"check_regress: pinned {len(blob['metrics'])} metrics "
+              f"to {args.baselines} (sha={blob['git_sha']})")
+        return 0
+
+    record = regress.make_record(args.results)
+    current = record["metrics"]
+    if not current:
+        print("check_regress: FAIL — no headline metrics found in "
+              f"{args.results}/ (bench suite did not run?)")
+        return 1
+    if not args.no_append:
+        regress.append_history(args.history, record)
+        print(f"check_regress: appended run {record['config_hash']} "
+              f"(sha={record['git_sha']}) to {args.history}")
+
+    try:
+        baselines = regress.load_baselines(args.baselines)
+    except OSError:
+        print(f"check_regress: FAIL — no baselines at {args.baselines}; "
+              "run with --pin to seed them")
+        return 1
+    violations, notes = regress.compare(
+        current, baselines["metrics"], baselines.get("tolerances")
+    )
+    for note in notes:
+        print(f"check_regress: note — {note}")
+    if violations:
+        print(f"check_regress: FAIL — {len(violations)} regression(s) "
+              f"vs baseline pinned at {baselines.get('pinned_at')} "
+              f"(sha={baselines.get('git_sha')}):")
+        for v in violations:
+            print(f"  REGRESSION {v}")
+        return 1
+    print(f"check_regress: OK — {len(current)} headline metrics within "
+          f"tolerance of the baseline pinned at "
+          f"{baselines.get('pinned_at')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -92,9 +92,13 @@ def paged_attention_bench() -> List[Row]:
     dispatch (streamed bytes + interpret walltime vs the unbucketed
     walk). Asserts that on ragged (geometric-length) workloads the
     bucketed dispatch streams <= 50% of the unbucketed bytes with
-    bit-identical valid-row outputs. Writes
+    bit-identical valid-row outputs, and that the obs/perf analytic
+    prediction matches the measured streamed pages within 1% (exact on
+    plan-derived counts, DESIGN.md §14). Writes
     ``results/paged_kernel_bench.json``."""
+    from repro.core.tpu_gold import TPU_V5E
     from repro.kernels import ops, ref
+    from repro.obs import perf
     from repro.kernels.paged_attention import (
         paged_decode_attention,
         paged_decode_attention_bucketed,
@@ -176,10 +180,24 @@ def paged_attention_bench() -> List[Row]:
         "kv_bytes_unbucketed": 2 * unbucketed_pages * page_b,
         "profiles": {},
     }
+    model_error_max = 0.0
     for pname, lens in profiles.items():
         lens_j = jnp.asarray(lens, jnp.int32)
         plan, perm = ops.make_bucket_plan(lens, bbs, bmb)
         streamed = ops.plan_streamed_pages(plan, bB, bmb)
+        # predicted-vs-measured (DESIGN.md §14): obs/perf re-derives the
+        # dispatch's streamed pages from the walk-entry needs alone; on
+        # plan-derived byte counts the prediction must be EXACT
+        needs = -(-np.maximum(lens.astype(np.int64), 1) // bbs)
+        predicted = perf.predict_streamed_pages(needs, bB, bmb)
+        model_error = (
+            abs(predicted - streamed) / streamed if streamed else 0.0
+        )
+        model_error_max = max(model_error_max, model_error)
+        assert model_error <= 0.01, (
+            f"bucketed/{pname}: predicted {predicted} pages vs "
+            f"measured {streamed} — model error {model_error} > 1%"
+        )
         single_us = _bench(
             lambda q_, l_: paged_decode_attention(
                 q_, bkp, bvp, bbt, l_, bwin, interpret=True
@@ -201,12 +219,20 @@ def paged_attention_bench() -> List[Row]:
             ))
             exact = bool(np.array_equal(a[lens > 0], b[lens > 0]))
         frac = streamed / unbucketed_pages
+        kv_bytes = 2 * streamed * page_b
         report["bucketed"]["profiles"][pname] = {
             "lengths": [int(x) for x in lens],
             "plan": list(plan) if plan is not None else None,
             "kv_pages_streamed": streamed,
-            "kv_bytes_streamed": 2 * streamed * page_b,
+            "kv_bytes_streamed": kv_bytes,
             "streamed_fraction": round(frac, 3),
+            "kv_pages_predicted": int(predicted),
+            "model_error": model_error,
+            # HBM-bound launch-time estimate at the device spec — the
+            # quantity the roofline autotuner will score candidates by
+            "roofline_us_tpu_v5e": round(
+                kv_bytes / TPU_V5E.hbm_bandwidth * 1e6, 4
+            ),
             "interpret_us_bucketed": round(buck_us, 1),
             "interpret_us_single": round(single_us, 1),
             "valid_rows_bit_exact": exact,
@@ -223,8 +249,10 @@ def paged_attention_bench() -> List[Row]:
             f"kernel/paged_bucketed_{pname}", buck_us,
             f"streamed_pages={streamed}/{unbucketed_pages};"
             f"fraction={frac:.0%};single_us={single_us:.0f};"
-            f"bit_exact={exact}",
+            f"bit_exact={exact};predicted_pages={predicted};"
+            f"model_error={model_error:g}",
         ))
+    report["bucketed"]["model_error_max"] = model_error_max
 
     # -- window-aware bucketing on a mixed global/window stack (§12) ------
     # The gemma3-27b geometry: 5:1 local(window 1024):global layers. A

@@ -66,6 +66,15 @@ def main() -> None:
         except Exception as e:  # keep the harness running; report at exit
             failures += 1
             print(f"{fn.__name__}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stdout)
+    # append this run's normalized headline record to the bench history
+    # (DESIGN.md §14) — failed sections are recorded too, so the history
+    # never silently skips a bad run
+    from repro.obs import regress
+
+    record = regress.make_record("results", extra={"failures": failures})
+    regress.append_history("results/history.jsonl", record)
+    print(f"history,0.0,appended={record['config_hash']};"
+          f"sha={record['git_sha']};failures={failures}")
     if failures:
         raise SystemExit(f"{failures} benchmark sections failed")
 

@@ -134,6 +134,27 @@ def serve_bench() -> List[Row]:
     )
     tel.close()
 
+    # predicted-vs-measured launch attribution (DESIGN.md §14): the
+    # model re-derives every launch's streamed bytes from pool geometry;
+    # both sides are structural, so the error must be within 1% (exact
+    # for plan-derived byte counts) — drift here means the dispatch
+    # streams something the analytic model no longer predicts
+    perf = tel.perf.summary()
+    assert perf["model_error_max"] <= 0.01, (
+        f"perf model error {perf['model_error_max']} exceeds 1% "
+        f"on the serve trace: {perf}"
+    )
+    paged["perf"] = perf
+    watcher = tel._compile_watcher
+    paged["recompiles"] = {
+        "total": watcher.total,
+        "by_step": watcher.by_step(),
+        "signatures": sorted(
+            f"{s}:{p}" for s, p in
+            {(r["step"], r["plans"]) for r in watcher.compiles}
+        ),
+    }
+
     report = {
         "trace": {"n_requests": n_requests, "prompt_lens": lens,
                   "new_tokens": new_tokens, "n_slots": n_slots},
@@ -175,6 +196,21 @@ def serve_bench() -> List[Row]:
         f"total={paged['streamed_bytes_total']};"
         f"ticks_sampled={len(paged['per_tick_streamed_bytes'])}",
     ))
+    phases = perf["phases"]
+    rows.append((
+        "serve/perf_attribution", 0.0,
+        f"model_error_max={perf['model_error_max']:g};" + ";".join(
+            f"{ph}_roofline_frac={st['roofline_fraction']:.3f}"
+            for ph, st in sorted(phases.items())
+        ),
+    ))
+    rows.append((
+        "serve/recompiles", 0.0,
+        f"total={paged['recompiles']['total']};" + ";".join(
+            f"{k}={v}" for k, v in
+            sorted(paged["recompiles"]["by_step"].items())
+        ),
+    ))
     return rows
 
 
@@ -197,19 +233,42 @@ def metrics_overhead_bench() -> List[Row]:
     kw = dict(n_slots=n_slots, cache_len=cache_len,
               new_tokens=new_tokens, paged=True, block_size=4)
 
+    from repro.serve.compiled import trace_count
+
+    t0 = trace_count()
     off_stats, off_results, _ = _drain(cfg, params, prompts, **kw)
+    off_traces = trace_count() - t0
     tel = ServeTelemetry()
+    t1 = trace_count()
     on_stats, on_results, _ = _drain(
         cfg, params, prompts, telemetry=tel, **kw
     )
+    on_traces = trace_count() - t1
     assert on_results == off_results, (
         "telemetry changed generated tokens — it must be observation-only"
+    )
+    # compile-cache parity (DESIGN.md §14): the watcher's AOT path must
+    # trace/compile exactly the signatures plain jit dispatch would —
+    # observability must not perturb the compile cache. The trace log
+    # is plain Python (no registry calls), so it counts both paths
+    # identically; the instrumented side is additionally cross-checked
+    # against the watcher's own per-compile records.
+    assert on_traces == off_traces, (
+        f"telemetry perturbed the compile cache: "
+        f"{off_traces} traces detached vs {on_traces} attached"
+    )
+    watcher_compiles = tel._compile_watcher.total
+    assert watcher_compiles == on_traces, (
+        f"compile watcher saw {watcher_compiles} compiles but "
+        f"{on_traces} step traces happened"
     )
     n_events = len(tel.events)
     return [(
         "serve/metrics_overhead", on_stats["wall_s"] * 1e6,
         f"off_wall_s={off_stats['wall_s']};on_wall_s={on_stats['wall_s']};"
-        f"tokens_bit_exact=True;events={n_events}",
+        f"tokens_bit_exact=True;events={n_events};"
+        f"compiles_off={off_traces};compiles_on={on_traces};"
+        f"compile_cache_parity=True",
     )]
 
 

@@ -175,6 +175,23 @@ def main():
         print(f"    kernel streamed bytes: {sb} "
               f"({len(telemetry.tick_streamed_bytes)} ticks sampled), "
               f"{len(telemetry.events)} events")
+        if telemetry.perf.phases:
+            perf = telemetry.perf.summary()
+            print("  perf attribution (DESIGN.md §14, "
+                  f"chip={perf['chip']}):")
+            for phase, st in sorted(perf["phases"].items()):
+                print(f"    {phase}: {st['launches']} launches, "
+                      f"predicted={st['predicted_bytes']}B "
+                      f"measured={st['measured_bytes']}B "
+                      f"err_max={st['model_error_max']:g} "
+                      f"roofline_frac={st['roofline_fraction']:.2f} "
+                      f"bucketing_savings={st['bucketing_savings']:.2f}")
+        if telemetry._compile_watcher is not None \
+                and telemetry._compile_watcher.total:
+            w = telemetry._compile_watcher
+            steps = ";".join(f"{k}={v}"
+                             for k, v in sorted(w.by_step().items()))
+            print(f"    recompiles: {w.total} total ({steps})")
         print("  --- prometheus snapshot ---")
         print("  " + telemetry.registry.prometheus().rstrip()
               .replace("\n", "\n  "))

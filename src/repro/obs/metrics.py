@@ -95,6 +95,25 @@ def _render(name: str, labels: LabelSet) -> str:
     return f"{name}{{{inner}}}"
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus exposition-format label-value escaping: backslash,
+    double-quote, and newline must be escaped or the scrape line is
+    unparseable (a plan signature or model name containing `"` would
+    otherwise corrupt the whole snapshot)."""
+    return v.replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n")
+
+
+def _render_prom(name: str, labels: LabelSet) -> str:
+    """Like `_render` but with exposition-format escaping; label order
+    is deterministic because `_labels` sorts label keys."""
+    if not labels:
+        return name
+    inner = ",".join(
+        f'{k}="{_escape_label_value(v)}"' for k, v in labels
+    )
+    return f"{name}{{{inner}}}"
+
+
 class Counter:
     """Monotone accumulator."""
 
@@ -171,6 +190,10 @@ class Histogram:
 
     def observe(self, v: float) -> None:
         _bump()
+        # bucket i spans (bounds[i-1], bounds[i]] — upper edges are
+        # INCLUSIVE, so a value exactly equal to the top finite edge
+        # lands in the last finite bucket, never in overflow
+        # (bisect_left returns the index of the first bound >= v)
         self.counts[bisect.bisect_left(self.bounds, v)] += 1
         self.sum += v
         self.count += 1
@@ -212,9 +235,12 @@ class MetricsRegistry:
     def __init__(self, clock=None):
         self.clock = clock if clock is not None else time.monotonic
         self._metrics: Dict[Tuple[str, LabelSet], object] = {}
+        self._help: Dict[str, str] = {}
 
-    def _get(self, cls, name: str, labels, **kw):
+    def _get(self, cls, name: str, labels, help=None, **kw):
         key = (name, _labels(labels))
+        if help is not None and name not in self._help:
+            self._help[name] = str(help)
         m = self._metrics.get(key)
         if m is None:
             m = cls(name, key[1], **kw)
@@ -225,16 +251,16 @@ class MetricsRegistry:
             )
         return m
 
-    def counter(self, name: str, labels=None) -> Counter:
-        return self._get(Counter, name, labels)
+    def counter(self, name: str, labels=None, help=None) -> Counter:
+        return self._get(Counter, name, labels, help=help)
 
-    def gauge(self, name: str, labels=None) -> Gauge:
-        return self._get(Gauge, name, labels)
+    def gauge(self, name: str, labels=None, help=None) -> Gauge:
+        return self._get(Gauge, name, labels, help=help)
 
     def histogram(self, name: str, labels=None,
-                  bounds: Sequence[float] = DEFAULT_LATENCY_BUCKETS
-                  ) -> Histogram:
-        h = self._get(Histogram, name, labels, bounds=bounds)
+                  bounds: Sequence[float] = DEFAULT_LATENCY_BUCKETS,
+                  help=None) -> Histogram:
+        h = self._get(Histogram, name, labels, help=help, bounds=bounds)
         if h.bounds != tuple(float(b) for b in bounds):
             raise ValueError(
                 f"histogram {name}: conflicting bucket bounds"
@@ -258,26 +284,44 @@ class MetricsRegistry:
         }
 
     def prometheus(self) -> str:
-        """Prometheus-style text exposition snapshot."""
+        """Prometheus-style text exposition snapshot.
+
+        Format contract (pinned by the golden-file test in
+        `tests/test_obs.py`): metrics sort by (name, sorted label set)
+        so output is deterministic; each metric family gets one
+        `# HELP` line (when help text was registered) then one
+        `# TYPE` line before its first sample; label values are
+        exposition-escaped (`\\`, `"`, newline).
+        """
         lines: List[str] = []
         seen_type = set()
         for (name, labels), m in sorted(self._metrics.items()):
             if name not in seen_type:
+                if name in self._help:
+                    help_text = self._help[name].replace(
+                        "\\", r"\\").replace("\n", r"\n")
+                    lines.append(f"# HELP {name} {help_text}")
                 lines.append(f"# TYPE {name} {m.kind}")
                 seen_type.add(name)
-            full = _render(name, labels)
+            full = _render_prom(name, labels)
             if isinstance(m, Histogram):
                 cum = 0
                 for b, c in zip(m.bounds, m.counts):
                     cum += c
                     le = _labels(dict(labels) | {"le": f"{b:g}"})
-                    lines.append(f"{_render(name + '_bucket', le)} {cum}")
+                    lines.append(
+                        f"{_render_prom(name + '_bucket', le)} {cum}"
+                    )
                 le = _labels(dict(labels) | {"le": "+Inf"})
                 lines.append(
-                    f"{_render(name + '_bucket', le)} {m.count}"
+                    f"{_render_prom(name + '_bucket', le)} {m.count}"
                 )
-                lines.append(f"{_render(name + '_sum', labels)} {m.sum:g}")
-                lines.append(f"{_render(name + '_count', labels)} {m.count}")
+                lines.append(
+                    f"{_render_prom(name + '_sum', labels)} {m.sum:g}"
+                )
+                lines.append(
+                    f"{_render_prom(name + '_count', labels)} {m.count}"
+                )
             else:
                 v = m.value if m.value is not None else 0
                 lines.append(f"{full} {v:g}")

@@ -29,9 +29,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from ..core.tpu_gold import TPU_V5E, ChipSpec
 from ..kernels.ops import grouped_streamed_pages
 from .events import EventLog
 from .metrics import MetricsRegistry
+from .perf import CompileWatcher, PerfModel
 
 _PCTS = (50.0, 90.0, 99.0)
 
@@ -97,7 +99,8 @@ class ServeTelemetry:
     def __init__(self, registry: Optional[MetricsRegistry] = None,
                  events: Optional[EventLog] = None, clock=None,
                  events_path: Optional[str] = None,
-                 profile: bool = False):
+                 profile: bool = False,
+                 chip: Optional[ChipSpec] = None):
         if registry is None:
             registry = MetricsRegistry(clock=clock)
         self.registry = registry
@@ -108,6 +111,11 @@ class ServeTelemetry:
         #: request jax.profiler annotations (named_scope/TraceAnnotation)
         #: around the compiled step — read by the jit factories
         self.profile = profile
+        #: device spec the roofline predictions are priced against
+        self.chip = chip if chip is not None else TPU_V5E
+        #: predicted-vs-measured launch model (DESIGN.md §14)
+        self.perf = PerfModel(registry, self.chip)
+        self._compile_watcher: Optional[CompileWatcher] = None
         self.traces: Dict[int, RequestTrace] = {}
         #: per-tick series the benchmarks publish directly
         self.tick_streamed_bytes: List[int] = []
@@ -216,7 +224,9 @@ class ServeTelemetry:
         self._tick_bytes += nbytes
 
     def account_paged_launch(self, kind: str, plans, n_rows: int,
-                             pcache) -> None:
+                             pcache, eff_lengths=None, slots=None,
+                             strategy: Optional[str] = None,
+                             kernel_impl: str = "auto") -> None:
         """Streamed-page/byte accounting for one dispatch, derived from
         the bucket plans (DESIGN.md §11-§13): per group, the table
         entries the launch walks (`plans=None` = the full-depth walk),
@@ -224,16 +234,28 @@ class ServeTelemetry:
         The quantity is structural — it is what the kernels' block walk
         streams on the TPU path, and what the oracle path WOULD stream
         (the roofline-validation number), machine-independent either
-        way."""
+        way.
+
+        When the caller also passes the launch's geometry inputs
+        (`eff_lengths`/`slots`, plus the dispatch policy `strategy` /
+        `kernel_impl`), the perf model re-predicts the launch from pool
+        geometry alone and records predicted-vs-measured model error
+        next to the accounting (DESIGN.md §14)."""
         pages = grouped_streamed_pages(
             plans, n_rows, pcache.max_blocks_per_slot, len(pcache.pools)
         )
         plb = pcache.page_layer_bytes
-        nbytes = sum(
+        bytes_by_group = [
             len(pool.layers) * pg * plb
             for pool, pg in zip(pcache.pools, pages)
-        )
-        self.on_launch(kind, int(sum(pages)), int(nbytes))
+        ]
+        self.on_launch(kind, int(sum(pages)), int(sum(bytes_by_group)))
+        if eff_lengths is not None and strategy is not None:
+            self.perf.record_launch(
+                kind, pcache, plans, n_rows, eff_lengths, slots,
+                strategy, kernel_impl, [int(p) for p in pages],
+                [int(b) for b in bytes_by_group],
+            )
 
     # -- per-tick sampling -------------------------------------------------
 
@@ -301,6 +323,19 @@ class ServeTelemetry:
             diagnostic=diagnostic,
         )
 
+    # -- compile-cache introspection ---------------------------------------
+
+    def compile_watcher(self) -> CompileWatcher:
+        """The (lazily created, shared) watcher the jit factories report
+        compiles to — attach it via the `watcher=` factory kwarg
+        (`serve/compiled.py`). One watcher per telemetry object, so
+        `recompiles_total` spans every step the run compiles."""
+        if self._compile_watcher is None:
+            self._compile_watcher = CompileWatcher(
+                self.registry, self.chip
+            )
+        return self._compile_watcher
+
     # -- exporters ---------------------------------------------------------
 
     @property
@@ -329,8 +364,8 @@ class ServeTelemetry:
         }
 
     def summary(self) -> Dict[str, object]:
-        """The run-summary dict exporter (DESIGN.md §13)."""
-        return {
+        """The run-summary dict exporter (DESIGN.md §13-§14)."""
+        out = {
             "requests": {
                 **self.lifecycle_counts(),
                 "traced": len(self.traces),
@@ -344,6 +379,11 @@ class ServeTelemetry:
             "events": len(self.events),
             "metrics": self.registry.summary(),
         }
+        if self.perf.phases:
+            out["perf"] = self.perf.summary()
+        if self._compile_watcher is not None:
+            out["recompiles"] = self._compile_watcher.summary()
+        return out
 
     def close(self) -> None:
         self.events.close()

@@ -29,14 +29,105 @@ under `jax.profiler.TraceAnnotation`, which brackets the host-side
 dispatch in the profiler timeline. Combined with the per-bucket
 `named_scope` in `kernels.paged_common.bucketed_page_dispatch`, a
 profile shows exactly which bucket launch streamed what.
+
+Compile-cache introspection (DESIGN.md §14): passing a `watcher` (an
+`obs.perf.CompileWatcher`) switches the factory to an ahead-of-time
+execution path. `_IntrospectedStep` keeps its own signature cache —
+static plans plus the argument pytree's (structure, shape, dtype)
+signature, i.e. exactly what jax's jit cache keys on — and on a miss
+runs `jitted.lower(...).compile()` explicitly, timing the compile and
+reporting it to the watcher before caching the executable. On a hit it
+calls the cached `Compiled` directly. Every XLA compile is therefore
+observed exactly once (`serve_recompiles_total{step, plans}` in the
+registry), with walltime and `cost_analysis` FLOP/byte capture, and
+PR 4's "bounded recompile set" claim becomes a runtime metric.
+
+The module-level trace log is the neutral referee for the overhead
+bench: `fn` bodies append to it at *trace time* whether they were
+traced by plain jit dispatch (watcher off) or by `lower()` (watcher
+on). `trace_count()` deltas therefore count XLA traces identically on
+both paths — plain Python list appends, zero registry calls, so the
+metrics-off contract (`obs.metrics.mutation_count()` flat) still
+holds — and `metrics_overhead_bench` asserts the counts are identical:
+observability must not perturb the compile cache.
 """
 
 from __future__ import annotations
+
+import time
+from typing import List, Tuple
 
 import jax
 
 from ..configs.base import ModelConfig
 from ..models import decode_step_paged, prefill_paged
+
+#: (step kind, static plans) appended once per XLA trace of a serve
+#: step — trace-time side effect, see module docstring
+_TRACE_LOG: List[Tuple[str, object]] = []
+
+
+def _note_trace(kind: str, plans) -> None:
+    _TRACE_LOG.append((kind, plans))
+
+
+def trace_count(kind: str = None) -> int:
+    """Total serve-step traces this process, optionally per step kind."""
+    if kind is None:
+        return len(_TRACE_LOG)
+    return sum(1 for k, _ in _TRACE_LOG if k == kind)
+
+
+def _leaf_sig(leaf) -> tuple:
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return (tuple(leaf.shape), str(leaf.dtype),
+                bool(getattr(leaf, "weak_type", False)))
+    return ("py", type(leaf).__name__, leaf)
+
+
+def _call_signature(args, kwargs) -> tuple:
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (str(treedef), tuple(_leaf_sig(l) for l in leaves))
+
+
+class _IntrospectedStep:
+    """AOT wrapper around one jitted serve step: own signature cache,
+    explicit timed `lower().compile()` on miss, watcher report per
+    compile. The cached executable is called with the exact dynamic
+    argument structure it was lowered with (static `plans` is baked
+    into it and must not be re-passed)."""
+
+    def __init__(self, kind: str, jitted, watcher, scope: str,
+                 annotate: bool):
+        self.kind = kind
+        self._jitted = jitted
+        self._watcher = watcher
+        self._scope = scope
+        self._annotate = annotate
+        self._cache = {}
+
+    def __call__(self, *args, **kwargs):
+        # stay signature-transparent: callers pass `perms` positionally
+        # or by keyword; only the static `plans` kwarg is peeled off
+        # (it is baked into the executable and must not be re-passed)
+        plans = kwargs.pop("plans", None)
+        key = (plans, _call_signature(args, kwargs))
+        compiled = self._cache.get(key)
+        if compiled is None:
+            t0 = time.perf_counter()
+            compiled = self._jitted.lower(
+                *args, plans=plans, **kwargs
+            ).compile()
+            walltime = time.perf_counter() - t0
+            self._cache[key] = compiled
+            self._watcher.on_compile(self.kind, plans, walltime, compiled)
+        if self._annotate:
+            with jax.profiler.TraceAnnotation(self._scope):
+                return compiled(*args, **kwargs)
+        return compiled(*args, **kwargs)
+
+    def cache_size(self) -> int:
+        return len(self._cache)
 
 
 def _annotated(jitted, scope: str):
@@ -44,21 +135,30 @@ def _annotated(jitted, scope: str):
     timeline under `scope`. Keeps the jitted callable's signature
     (positional + `perms`/`plans` keywords) intact."""
 
-    def wrapped(*args, perms=None, plans=None):
+    def wrapped(*args, **kwargs):
         with jax.profiler.TraceAnnotation(scope):
-            return jitted(*args, perms=perms, plans=plans)
+            return jitted(*args, **kwargs)
 
     return wrapped
 
 
+def _finish(kind: str, jitted, scope: str, annotate: bool, watcher):
+    if watcher is not None:
+        return _IntrospectedStep(kind, jitted, watcher, scope, annotate)
+    if annotate:
+        return _annotated(jitted, scope)
+    return jitted
+
+
 def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto",
-                      annotate: bool = False):
+                      annotate: bool = False, watcher=None):
     """(params, toks, k_pages, v_pages, block_tables, block_starts,
     start, total, last_pos[, perms], plans=...) ->
     (logits, k_pages, v_pages). Retraces once per (padded suffix-length
     bucket, plan combination) pair."""
 
     def fn(p, toks, kp, vp, bt, st, strt, tot, lp, perms=None, plans=None):
+        _note_trace("prefill", plans)
         if annotate:
             with jax.named_scope("serve/paged_prefill"):
                 return prefill_paged(
@@ -72,18 +172,18 @@ def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto",
         )
 
     jitted = jax.jit(fn, static_argnames=("plans",))
-    if annotate:
-        return _annotated(jitted, "serve/paged_prefill")
-    return jitted
+    return _finish("prefill", jitted, "serve/paged_prefill", annotate,
+                   watcher)
 
 
 def jit_paged_decode(cfg: ModelConfig, impl: str = "auto",
-                     annotate: bool = False):
+                     annotate: bool = False, watcher=None):
     """(params, token, k_pages, v_pages, block_tables, block_starts,
     positions[, perms], plans=...) -> (logits, k_pages, v_pages).
     Retraces once per plan combination."""
 
     def fn(p, t, kp, vp, bt, st, pos, perms=None, plans=None):
+        _note_trace("decode", plans)
         if annotate:
             with jax.named_scope("serve/paged_decode"):
                 return decode_step_paged(
@@ -96,6 +196,5 @@ def jit_paged_decode(cfg: ModelConfig, impl: str = "auto",
         )
 
     jitted = jax.jit(fn, static_argnames=("plans",))
-    if annotate:
-        return _annotated(jitted, "serve/paged_decode")
-    return jitted
+    return _finish("decode", jitted, "serve/paged_decode", annotate,
+                   watcher)

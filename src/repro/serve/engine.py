@@ -75,15 +75,18 @@ class ServeEngine:
         #: distinct trace uids
         self._uid_base = 0
         annotate = telemetry is not None and telemetry.profile
+        watcher = None if telemetry is None else telemetry.compile_watcher()
         self._prefill = jax.jit(
             lambda p, t: prefill(p, t, cfg, cache_len=serve_cfg.max_cache_len)
         )
         self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
         self._decode_paged = jit_paged_decode(
-            cfg, impl=serve_cfg.kernel_impl, annotate=annotate
+            cfg, impl=serve_cfg.kernel_impl, annotate=annotate,
+            watcher=watcher,
         )
         self._prefill_paged = jit_paged_prefill(
-            cfg, impl=serve_cfg.kernel_impl, annotate=annotate
+            cfg, impl=serve_cfg.kernel_impl, annotate=annotate,
+            watcher=watcher,
         )
         resolve_bucket_strategy(serve_cfg.bucket_strategy)
 
@@ -185,7 +188,11 @@ class ServeEngine:
         zeros = jnp.zeros((b,), jnp.int32)
         plans, perms = self._bucket_args(pc, np.full((b,), t))
         if tel is not None:
-            tel.account_paged_launch("prefill", plans, b, pc)
+            tel.account_paged_launch(
+                "prefill", plans, b, pc, eff_lengths=np.full((b,), t),
+                strategy=self.sc.bucket_strategy,
+                kernel_impl=self.sc.kernel_impl,
+            )
         logits, pc.k_pages, pc.v_pages = self._prefill_paged(
             self.params, toks, pc.k_pages, pc.v_pages,
             pc.device_block_tables(), pc.device_block_starts(),
@@ -219,7 +226,11 @@ class ServeEngine:
                     pc.begin_append(i, int(pc.lengths[i]), 1)
             plans, perms = self._bucket_args(pc, pc.lengths + 1)
             if tel is not None:
-                tel.account_paged_launch("decode", plans, b, pc)
+                tel.account_paged_launch(
+                    "decode", plans, b, pc, eff_lengths=pc.lengths + 1,
+                    strategy=self.sc.bucket_strategy,
+                    kernel_impl=self.sc.kernel_impl,
+                )
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, tok, pc.k_pages, pc.v_pages,
                 pc.device_block_tables(), pc.device_block_starts(),

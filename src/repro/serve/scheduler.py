@@ -167,6 +167,9 @@ class ContinuousBatcher:
             if prefix else None
         )
         annotate = telemetry is not None and telemetry.profile
+        # telemetry attached => compile-cache introspection on: every
+        # XLA compile of a serve step is observed (DESIGN.md §14)
+        watcher = None if telemetry is None else telemetry.compile_watcher()
         if paged:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
@@ -174,13 +177,13 @@ class ContinuousBatcher:
             )
             self.cache = None
             self._decode_paged = jit_paged_decode(
-                cfg, impl=kernel_impl, annotate=annotate
+                cfg, impl=kernel_impl, annotate=annotate, watcher=watcher
             )
             # suffixes are right-padded to a block-size multiple, so this
             # retraces once per bucket and `last_pos` selects the true
             # suffix end dynamically
             self._prefill_paged = jit_paged_prefill(
-                cfg, impl=kernel_impl, annotate=annotate
+                cfg, impl=kernel_impl, annotate=annotate, watcher=watcher
             )
         else:
             self.pcache = None
@@ -340,8 +343,13 @@ class ContinuousBatcher:
         self.prefill_tokens += pad
         if self.telemetry is not None:
             self.telemetry.on_prefill(req.uid, pad)
-            # one-slot launch: n_rows=1 (the table snapshot was sliced)
-            self.telemetry.account_paged_launch("prefill", plans, 1, pc)
+            # one-slot launch: n_rows=1 (the table snapshot was sliced);
+            # geometry inputs let the perf model re-predict the launch
+            self.telemetry.account_paged_launch(
+                "prefill", plans, 1, pc, eff_lengths=[t], slots=[i],
+                strategy=self.bucket_strategy,
+                kernel_impl=self._kernel_impl,
+            )
         if self.prefix is not None:
             self.prefix.lookups += 1
             self.prefix.hits += bool(n_cached)
@@ -454,7 +462,10 @@ class ContinuousBatcher:
         plans, perms = self._bucket_args(pc.lengths + 1)
         if self.telemetry is not None:
             self.telemetry.account_paged_launch(
-                "decode", plans, self.n_slots, pc
+                "decode", plans, self.n_slots, pc,
+                eff_lengths=pc.lengths + 1,
+                strategy=self.bucket_strategy,
+                kernel_impl=self._kernel_impl,
             )
         logits, pc.k_pages, pc.v_pages = self._decode_paged(
             self.params, self.tokens, pc.k_pages, pc.v_pages,

@@ -141,17 +141,143 @@ def test_prometheus_exposition():
     assert "serve_ttft_s_count 2" in text
 
 
+def test_histogram_top_edge_inclusive():
+    """Bucket upper edges are INCLUSIVE: a value exactly equal to the
+    top finite bound lands in the last finite bucket, never in
+    overflow. Pinned here because the model-error histograms put exact
+    predictions (error == 0 == first edge... and saturated errors ==
+    1.0 == last edge) right on bucket boundaries."""
+    r = MetricsRegistry(clock=ManualClock())
+    h = r.histogram("perf_model_error", bounds=(0.1, 1.0))
+    h.observe(0.1)  # == an interior edge -> that bucket, not the next
+    h.observe(1.0)  # == top finite edge -> last finite bucket
+    assert h.counts == [1, 1, 0]
+    h.observe(1.0 + 1e-9)  # strictly above -> overflow
+    assert h.counts == [1, 1, 1]
+
+
+def test_histogram_percentile_at_bucket_boundary():
+    """Interpolation with all mass at the top edge: p100 returns the
+    edge exactly; interior percentiles interpolate inside the final
+    finite bucket (lo = previous edge)."""
+    r = MetricsRegistry(clock=ManualClock())
+    h = r.histogram("x", bounds=(0.1, 1.0))
+    for _ in range(4):
+        h.observe(1.0)
+    assert h.percentile(100) == 1.0
+    assert h.percentile(50) == pytest.approx(0.1 + 0.9 * 0.5)
+    # overflow observations clamp percentiles to the last finite bound
+    h.observe(7.0)
+    assert h.percentile(100) == 1.0
+
+
+def _golden_registry() -> MetricsRegistry:
+    r = MetricsRegistry(clock=ManualClock())
+    r.counter("serve_ticks", help="scheduler ticks elapsed").inc(3)
+    r.counter(
+        "serve_recompiles_total",
+        {"step": "decode", "plans": 'geo "pow2"\nw\\2x1+4x1'},
+        help="XLA compiles by step kind x plan signature",
+    ).inc(2)
+    r.gauge("pool_occupancy", {"zeta": "z", "alpha": "a"}).set(0.5)
+    h = r.histogram("serve_ttft_s", bounds=(0.1, 1.0),
+                    help="time to first token (s)")
+    for v in (0.05, 1.0, 5.0):
+        h.observe(v)
+    return r
+
+
+def test_prometheus_golden_snapshot():
+    """Pin the full exposition format against a golden file: HELP/TYPE
+    lines, deterministic (name, sorted-label) ordering, and
+    exposition-format escaping of backslash/quote/newline in label
+    values (plan signatures can contain any of them)."""
+    import pathlib
+
+    text = _golden_registry().prometheus()
+    golden = (pathlib.Path(__file__).parent
+              / "golden" / "prometheus_snapshot.txt").read_text()
+    assert text == golden
+    # spot-check the load-bearing properties independently of the file
+    assert "# HELP serve_ticks scheduler ticks elapsed" in text
+    assert "# TYPE serve_ttft_s histogram" in text
+    # label keys sort within a line; families sort by name
+    assert text.index("pool_occupancy") < text.index(
+        "serve_recompiles_total") < text.index("serve_ticks")
+    assert 'pool_occupancy{alpha="a",zeta="z"} 0.5' in text
+    # escaped label value: \ -> \\, " -> \", newline -> \n
+    assert ('serve_recompiles_total{plans="geo \\"pow2\\"\\n'
+            'w\\\\2x1+4x1",step="decode"} 2') in text
+    assert "\n" + 'serve_ttft_s_bucket{le="1"} 2' + "\n" in text
+    # identical registry renders the identical snapshot (determinism)
+    assert _golden_registry().prometheus() == text
+
+
 def test_event_log_stream(tmp_path):
     path = tmp_path / "events.jsonl"
     clk = ManualClock(0.0, tick=1.0)
     with EventLog(path=str(path), clock=clk) as log:
         log.emit("submit", uid=0)
         log.emit("finish", uid=0, tokens_out=3)
+    # context-manager exit closes the stream: flushes, appends run_end
     lines = [json.loads(ln) for ln in path.read_text().splitlines()]
-    assert [e["seq"] for e in lines] == [0, 1]
+    assert [e["seq"] for e in lines] == [0, 1, 2]
     assert lines[1] == {"seq": 1, "ts": 1.0, "event": "finish",
                         "uid": 0, "tokens_out": 3}
-    assert len(log.of("submit")) == 1 and len(log) == 2
+    assert len(log.of("submit")) == 1 and len(log) == 3
+
+
+def test_event_log_run_end_terminal(tmp_path):
+    """close() emits the terminal run_end with the per-type tally of
+    everything before it, is idempotent, and seals the log — the
+    truncation-detection contract check_metrics.py relies on."""
+    path = tmp_path / "events.jsonl"
+    log = EventLog(path=str(path), clock=ManualClock(0.0, tick=1.0))
+    log.emit("submit", uid=0)
+    log.emit("decode", uids=[0])
+    log.emit("decode", uids=[0])
+    log.emit("finish", uid=0)
+    assert not log.closed
+    log.close()
+    assert log.closed
+    log.close()  # idempotent: exactly one run_end
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == 5
+    end = lines[-1]
+    assert end["event"] == "run_end"
+    assert end["events"] == 4
+    assert end["by_type"] == {"submit": 1, "decode": 2, "finish": 1}
+    assert len(log.of("run_end")) == 1
+    with pytest.raises(RuntimeError):
+        log.emit("submit", uid=1)
+
+
+def test_truncated_event_stream_detected(tmp_path):
+    """check_events fails a stream whose run_end is missing or whose
+    tally disagrees with the lines on disk (a crashed/truncated file)."""
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "check_metrics_mod",
+        pathlib.Path(__file__).parent.parent
+        / "benchmarks" / "check_metrics.py",
+    )
+    cm = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cm)
+
+    log = EventLog(path=None, clock=ManualClock(0.0, tick=1.0))
+    log.emit("submit", uid=0)
+    log.emit("decode", uids=[0])
+    log.emit("finish", uid=0, tokens_out=2, decode_events=1)
+    log.close()
+    full = [json.dumps(e) for e in log.events]
+    cm.check_events(full)  # intact stream passes
+    with pytest.raises(AssertionError, match="truncated"):
+        cm.check_events(full[:-1])  # run_end lost
+    # run_end present but an interior line lost: tally disagrees
+    with pytest.raises(AssertionError, match="truncated"):
+        cm.check_events([full[0]] + full[2:])
 
 
 # ---------------------------------------------------------------------------
