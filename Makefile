@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench serve-demo serve-prefix-demo
+.PHONY: test test-fast lint bench serve-demo serve-prefix-demo
 
 # tier-1 verify (ROADMAP): full suite, stop on first failure
 test:
@@ -10,6 +10,11 @@ test:
 # skip the slow multi-device subprocess dry-runs
 test-fast:
 	python -m pytest -x -q -m "not slow" --ignore=tests/test_dist_subprocess.py
+
+# static analysis (DESIGN.md §15): jaxpr lint + Pallas kernel contracts
+# + repo conventions, gated against analysis/baseline.json
+lint:
+	python -m repro.analysis --gate
 
 bench:
 	python -m benchmarks.run

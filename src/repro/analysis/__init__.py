@@ -1,0 +1,62 @@
+"""Static-analysis subsystem: machine-checked serving contracts.
+
+Three layers (DESIGN.md §15), each producing `Finding` records with a
+rule id, file:line, severity and message:
+
+  * `jaxpr_lint`      — trace the compiled serve steps (the same jit
+    factories `serve/compiled.py` ships) and walk the jaxpr for
+    hot-path host transfers, float64 creep, whole-pool VMEM
+    materialization, `lax.switch` branch counts that disagree with
+    `models.layer_attn_groups`, and weak-typed step inputs that defeat
+    the §11 bounded-recompile-set guarantee.
+  * `kernel_contracts` — Pallas kernel contract checker over the paged
+    kernel sources: scalar-prefetch operand arity, ANY/HBM pool
+    memory-space annotations, DMA semaphore scratch, and the
+    `make_async_copy` issue-before-fold / wait-before-use ordering.
+  * `repo_lint`        — stdlib-`ast` repo conventions: serve-step
+    compiles only through `serve/compiled.py`, impl selection only via
+    `ops.resolve_impl`, telemetry calls in scheduler/engine guarded by
+    a None-check, no wall-clock reads in serve/obs hot paths
+    (ManualClock injection only), and every public
+    `PagedKVCache`/`LayerPagePool` mutator covered by a
+    `check_invariants` call site in tests.
+
+The committed `analysis/baseline.json` makes the CI gate
+(`python -m repro.analysis --gate`) fail only on NEW findings, so the
+pass ratchets: the baseline for `src/` is empty and must stay empty.
+"""
+
+from .findings import (
+    Finding,
+    diff_findings,
+    load_baseline,
+    write_findings_json,
+)
+from .jaxpr_lint import lint_jaxpr, lint_serve_steps, probe_config
+from .kernel_contracts import check_kernel_contracts
+from .repo_lint import check_repo_conventions
+
+__all__ = [
+    "Finding",
+    "check_kernel_contracts",
+    "check_repo_conventions",
+    "diff_findings",
+    "lint_jaxpr",
+    "lint_serve_steps",
+    "load_baseline",
+    "probe_config",
+    "run_all",
+    "write_findings_json",
+]
+
+
+def run_all(root: str, layers=("jaxpr", "kernels", "repo")):
+    """All findings from the selected layers, sorted for stable output."""
+    out = []
+    if "repo" in layers:
+        out.extend(check_repo_conventions(root))
+    if "kernels" in layers:
+        out.extend(check_kernel_contracts(root))
+    if "jaxpr" in layers:
+        out.extend(lint_serve_steps())
+    return sorted(out, key=lambda f: (f.rule, f.file, f.line, f.message))

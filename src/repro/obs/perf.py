@@ -339,6 +339,13 @@ class CompileWatcher:
         self.chip = chip
         self.compiles: List[Dict[str, object]] = []
 
+    def clock(self) -> float:
+        """The registry's injected clock, in seconds. Compile timing in
+        `serve/compiled.py` reads time through here — never the wall
+        clock directly (analysis rule RL204) — so a `ManualClock`
+        registry makes compile walltimes deterministic in tests."""
+        return float(self.registry.clock())
+
     def on_compile(self, step: str, plans, walltime_s: float,
                    compiled) -> None:
         sig = plan_signature(plans)

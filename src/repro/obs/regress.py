@@ -88,6 +88,15 @@ HEADLINE_SPECS: Tuple[Tuple[str, str, str, str, float, float], ...] = (
      "shared.streamed_bytes_total", "high_bad", 0.01, 0.0),
     ("prefix.shared.pages_allocated", "prefix_bench.json",
      "shared.pages_allocated", "exact", 0.0, 0.0),
+    # static-analysis ratchet (DESIGN.md §15) — findings may only
+    # shrink. NEW findings already fail `python -m repro.analysis
+    # --gate`; pinning the totals here makes the count visible in
+    # history.jsonl and turns silent baseline growth into a perf
+    # regression too.
+    ("analysis.findings_total", "analysis_findings.json",
+     "counts.total", "high_bad", 0.0, 0.0),
+    ("analysis.findings_new", "analysis_findings.json",
+     "counts.new", "high_bad", 0.0, 0.0),
 )
 
 #: ungated trend-only scalars recorded in history (walltime noise)

@@ -54,13 +54,12 @@ observability must not perturb the compile cache.
 
 from __future__ import annotations
 
-import time
 from typing import List, Tuple
 
 import jax
 
 from ..configs.base import ModelConfig
-from ..models import decode_step_paged, prefill_paged
+from ..models import decode_step, decode_step_paged, prefill, prefill_paged
 
 #: (step kind, static plans) appended once per XLA trace of a serve
 #: step — trace-time side effect, see module docstring
@@ -114,11 +113,14 @@ class _IntrospectedStep:
         key = (plans, _call_signature(args, kwargs))
         compiled = self._cache.get(key)
         if compiled is None:
-            t0 = time.perf_counter()
+            # compile timing reads the watcher's injected clock, never
+            # the wall clock directly (RL204 — ManualClock in tests
+            # makes compile walltimes deterministic)
+            t0 = self._watcher.clock()
             compiled = self._jitted.lower(
                 *args, plans=plans, **kwargs
             ).compile()
-            walltime = time.perf_counter() - t0
+            walltime = self._watcher.clock() - t0
             self._cache[key] = compiled
             self._watcher.on_compile(self.kind, plans, walltime, compiled)
         if self._annotate:
@@ -198,3 +200,40 @@ def jit_paged_decode(cfg: ModelConfig, impl: str = "auto",
     jitted = jax.jit(fn, static_argnames=("plans",))
     return _finish("decode", jitted, "serve/paged_decode", annotate,
                    watcher)
+
+
+def jit_dense_prefill(cfg: ModelConfig, cache_len: int,
+                      annotate: bool = False, watcher=None):
+    """(params, toks) -> (logits, cache): the dense pre-allocated-cache
+    prefill. Lives here (not inline in the engines) so dense serve-step
+    compiles share the paged path's introspection/annotation plumbing —
+    `jax.jit` of a serve step outside this module is a lint violation
+    (analysis rule RL201)."""
+
+    def fn(p, toks, plans=None):
+        _note_trace("dense_prefill", plans)
+        if annotate:
+            with jax.named_scope("serve/dense_prefill"):
+                return prefill(p, toks, cfg, cache_len=cache_len)
+        return prefill(p, toks, cfg, cache_len=cache_len)
+
+    jitted = jax.jit(fn, static_argnames=("plans",))
+    return _finish("dense_prefill", jitted, "serve/dense_prefill",
+                   annotate, watcher)
+
+
+def jit_dense_decode(cfg: ModelConfig, annotate: bool = False,
+                     watcher=None):
+    """(params, token, cache) -> (logits, cache): one dense decode
+    step. Same single-home rule as `jit_dense_prefill`."""
+
+    def fn(p, t, cache, plans=None):
+        _note_trace("dense_decode", plans)
+        if annotate:
+            with jax.named_scope("serve/dense_decode"):
+                return decode_step(p, t, cache, cfg)
+        return decode_step(p, t, cache, cfg)
+
+    jitted = jax.jit(fn, static_argnames=("plans",))
+    return _finish("dense_decode", jitted, "serve/dense_decode",
+                   annotate, watcher)

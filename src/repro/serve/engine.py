@@ -38,10 +38,14 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..kernels.ops import bucket_args_grouped, resolve_bucket_strategy
-from ..models import decode_step, init_cache, prefill
 from ..obs import ServeTelemetry
 from ..quant.bitplane import PimQuantConfig, quantize_tree, tree_packed_fraction
-from .compiled import jit_paged_decode, jit_paged_prefill
+from .compiled import (
+    jit_dense_decode,
+    jit_dense_prefill,
+    jit_paged_decode,
+    jit_paged_prefill,
+)
 from .paged_cache import PagedKVCache
 
 
@@ -76,10 +80,13 @@ class ServeEngine:
         self._uid_base = 0
         annotate = telemetry is not None and telemetry.profile
         watcher = None if telemetry is None else telemetry.compile_watcher()
-        self._prefill = jax.jit(
-            lambda p, t: prefill(p, t, cfg, cache_len=serve_cfg.max_cache_len)
+        self._prefill = jit_dense_prefill(
+            cfg, serve_cfg.max_cache_len, annotate=annotate,
+            watcher=watcher,
         )
-        self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
+        self._decode = jit_dense_decode(
+            cfg, annotate=annotate, watcher=watcher
+        )
         self._decode_paged = jit_paged_decode(
             cfg, impl=serve_cfg.kernel_impl, annotate=annotate,
             watcher=watcher,
@@ -96,6 +103,8 @@ class ServeEngine:
         uids = list(range(self._uid_base, self._uid_base + b))
         self._uid_base += b
         tel = self.telemetry
+        if tel is None:
+            return uids
         for slot, uid in enumerate(uids):
             tel.on_submit(uid, prompt_tokens, self.sc.max_new_tokens)
             tel.on_admit(uid, slot)

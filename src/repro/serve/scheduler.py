@@ -63,9 +63,14 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..kernels.ops import bucket_args_grouped, resolve_bucket_strategy
-from ..models import decode_step, init_cache, prefill
+from ..models import init_cache
 from ..obs import ServeTelemetry
-from .compiled import jit_paged_decode, jit_paged_prefill
+from .compiled import (
+    jit_dense_decode,
+    jit_dense_prefill,
+    jit_paged_decode,
+    jit_paged_prefill,
+)
 from .paged_cache import PagedKVCache
 from .prefix_cache import PrefixIndex
 
@@ -188,9 +193,11 @@ class ContinuousBatcher:
         else:
             self.pcache = None
             self.cache = init_cache(cfg, n_slots, cache_len)
-            self._decode = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))
-            self._prefill_dense = jax.jit(
-                lambda p, t: prefill(p, t, cfg, cache_len=cache_len)
+            self._decode = jit_dense_decode(
+                cfg, annotate=annotate, watcher=watcher
+            )
+            self._prefill_dense = jit_dense_prefill(
+                cfg, cache_len, annotate=annotate, watcher=watcher
             )
 
     def submit(self, req: Request):
@@ -426,6 +433,8 @@ class ContinuousBatcher:
         depth, active slots, per-group pool state, dedup bytes, prefix
         index — everything the per-tick series and peak gauges need."""
         tel = self.telemetry
+        if tel is None:
+            return
         queued = len(self.queue)
         active = sum(s is not None for s in self.slots)
         if not self.paged:

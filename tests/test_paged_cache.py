@@ -369,3 +369,73 @@ def test_prefill_complete_requests_drain_through_one_slot_in_one_tick(model):
     assert all(len(v) == 1 for v in cb.finished.values())
     cb.pcache.check_invariants()
     assert cb.pcache.n_free == cb.pcache.n_blocks - 1
+
+
+def test_layer_pool_direct_mutators_hold_invariants():
+    """Every LayerPagePool mutator exercised directly — grow (with
+    dead-at-birth blocks), window retirement, shared-page attach, COW
+    make_writable — with check_invariants after each step (analysis
+    rule RL205 requires exactly this coverage)."""
+    from repro.serve.paged_cache import LayerPagePool
+
+    pool = LayerPagePool(
+        gid=0, layers=(0,), window=4, n_slots=2, mb=4, n_blocks=9,
+        block_size=4, retire=True,
+    )
+    lengths = np.zeros((2,), np.int64)
+
+    # grow: slot 0 covers 10 tokens -> 3 live blocks drawn
+    pool.grow(0, 0, 10)
+    lengths[0] = 10
+    assert pool.live_pages(0) == 3
+    pool.check_invariants(lengths, None)
+
+    # retire: with q_min=9 and window=4 exactly block 0 is dead
+    assert pool.retire(0, 9) == 1
+    assert int(pool.first_block[0]) == 1
+    assert pool.block_table[0, 0] == SCRATCH_PAGE
+    pool.check_invariants(lengths, None)
+
+    # grow with dead-at-birth: slot 1's block 0 is already behind the
+    # window at q_min=9 — no pool draw, walk starts at block 1
+    pool.grow(1, 9, 10)
+    lengths[1] = 10
+    assert pool._owned[1][0] is None
+    assert pool.live_pages(1) == 2
+    pool.check_invariants(lengths, None)
+    pool.free_slot(1)
+    lengths[1] = 0
+    pool.check_invariants(lengths, None)
+
+    # attach: slot 1 shares slot 0's live tail (a prefix hit whose
+    # window-skipped head is dead at j0)
+    shared = [p for p in pool._owned[0] if p is not None]
+    pool.attach(1, 1, shared)
+    lengths[1] = 10
+    assert int(pool.first_block[1]) == 1
+    assert all(pool.refcount(p) == 2 for p in shared)
+    pool.check_invariants(lengths, None)
+
+    # make_writable: COW of a shared block copies only this group's
+    # layer rows and splits the mapping
+    class _Cache:
+        k_pages = jnp.zeros((1, 9, 4, 1, 2), jnp.float32)
+        v_pages = jnp.zeros((1, 9, 4, 1, 2), jnp.float32)
+
+    pool.make_writable(_Cache(), 1, 1)
+    assert pool.cow_events == 1
+    assert int(pool.block_table[1, 1]) != int(pool.block_table[0, 1])
+    assert pool.refcount(int(pool.block_table[0, 1])) == 1
+    pool.check_invariants(lengths, None)
+
+    # retain/release round-trip on a live page, then drain everything
+    page = int(pool.block_table[0, 1])
+    pool.retain(page)
+    assert pool.refcount(page) == 2
+    pool.release(page)
+    pool.check_invariants(lengths, None)
+    pool.free_slot(0)
+    pool.free_slot(1)
+    lengths[:] = 0
+    pool.check_invariants(lengths, None)
+    assert pool.n_free == pool.n_blocks - 1
