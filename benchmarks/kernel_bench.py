@@ -107,7 +107,11 @@ def paged_attention_bench() -> List[Row]:
 
     rng = np.random.default_rng(0)
     B, T, H, KV, hd, bs, nb, mb = 4, 8, 8, 2, 16, 8, 32, 4
-    itemsize = 2  # bf16 pools on the target
+    # byte accounting derives from the modeled pool dtype, never a
+    # hardcoded itemsize literal — the int8 leg below re-derives its own
+    # page bytes from the actual quantized pools (DESIGN.md §16)
+    kv_pool_dtype = jnp.bfloat16
+    itemsize = jnp.dtype(kv_pool_dtype).itemsize
     q1 = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
     qt = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
     kp = jnp.asarray(rng.normal(size=(nb, bs, KV, hd)), jnp.float32)
@@ -254,6 +258,67 @@ def paged_attention_bench() -> List[Row]:
         ))
     report["bucketed"]["model_error_max"] = model_error_max
 
+    # -- int8 quantized pools (DESIGN.md §16) -----------------------------
+    # Quantize the same fp pools to int8 codes + per-page scales, run the
+    # SAME kernels (the scale rows ride the double-buffered page walk and
+    # dequantize in-register), and pin two headline quantities: the
+    # per-page resident/streamed byte ratio vs bf16 (codes at itemsize 1
+    # plus a KV-wide f32 scale row) and the end-to-end error vs the fp
+    # oracle (the tolerance-parity contract: int8 is lossy by design, the
+    # kernel must stay tight against the QUANTIZED oracle).
+    from repro.kernels.paged_common import quantize_pages
+
+    kq, ks = quantize_pages(kp)
+    vq, vs = quantize_pages(vp)
+    int8_page_bytes = (
+        bs * KV * hd * jnp.dtype(kq.dtype).itemsize
+        + KV * jnp.dtype(ks.dtype).itemsize
+    )
+    resident_ratio = int8_page_bytes / page_bytes
+    report["quantized"] = {
+        "pool_dtype": "int8",
+        "page_bytes_bf16": page_bytes,
+        "page_bytes_int8": int8_page_bytes,
+        "resident_bytes_ratio": round(resident_ratio, 4),
+    }
+    # the §16 acceptance bound: quantized pages stream <= 55% of bf16
+    assert resident_ratio <= 0.55, report["quantized"]
+    q_err_max = 0.0
+    for name, fn, oracle, fp_args, q_args in (
+        ("decode", paged_decode_attention, ref.paged_attention_ref,
+         (q1, kp, vp, bt, lengths, win),
+         (q1, kq, vq, bt, lengths, win)),
+        ("prefill", paged_prefill_attention, ref.paged_prefill_ref,
+         (qt, kp, vp, bt, start, total, win),
+         (qt, kq, vq, bt, start, total, win)),
+    ):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(
+            fn(*q_args, k_scales=ks, v_scales=vs, interpret=True)
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        # tight vs the quantized oracle (same codes, same dequant)
+        err_q = float(jnp.max(jnp.abs(
+            out - oracle(*q_args, k_scales=ks, v_scales=vs)
+        )))
+        assert err_q < 2e-5, (name, err_q)
+        # tolerance-based vs the fp oracle (pinned int8 budget, §16)
+        err_fp = float(jnp.max(jnp.abs(out - oracle(*fp_args))))
+        assert err_fp <= 5e-2, (name, err_fp)
+        q_err_max = max(q_err_max, err_fp)
+        report["quantized"][name] = {
+            "interpret_us": round(us, 1),
+            "max_abs_err_vs_quantized_oracle": err_q,
+            "max_abs_err_vs_fp_oracle": err_fp,
+        }
+        rows.append((
+            f"kernel/paged_{name}_int8_b{B}", us,
+            f"err_vs_fp={err_fp:.2e};err_vs_qoracle={err_q:.2e};"
+            f"page_bytes={int8_page_bytes}/{page_bytes};"
+            f"resident_ratio={resident_ratio:.2%}",
+        ))
+    report["quantized"]["max_abs_err_vs_fp_oracle"] = q_err_max
+
     # -- window-aware bucketing on a mixed global/window stack (§12) ------
     # The gemma3-27b geometry: 5:1 local(window 1024):global layers. A
     # length-only plan (DESIGN.md §11) walks a windowed layer's FULL
@@ -336,10 +401,24 @@ def paged_attention_bench() -> List[Row]:
     ))
     assert np.array_equal(full, walked), "windowed walk-start diverged"
     report["windowed"]["walk_start_bit_exact"] = True
+    # the §16 acceptance on the gemma3-27b windowed stack: int8 pages
+    # (codes at their true itemsize plus the f32 scale row per page)
+    # stream <= 55% of the bf16 page bytes on a decode tick — byte math
+    # derived from the actual quantized pool dtypes, not a literal
+    int8_page_b64 = (
+        wbs * KV * hd * jnp.dtype(kq.dtype).itemsize
+        + KV * jnp.dtype(ks.dtype).itemsize
+    )
+    int8_tick_bytes = int(2 * streamed_grouped * int8_page_b64)
+    int8_ratio = int8_tick_bytes / (2 * streamed_grouped * page_b64)
+    report["windowed"]["kv_bytes_per_tick_int8"] = int8_tick_bytes
+    report["windowed"]["int8_streamed_bytes_ratio"] = round(int8_ratio, 4)
+    assert int8_ratio <= 0.55, report["windowed"]
     rows.append((
         "kernel/paged_windowed_stack", 0.0,
         f"stack_pages={streamed_grouped}/{streamed_len_only};"
-        f"fraction={win_frac:.0%};walk_start_bit_exact=True",
+        f"fraction={win_frac:.0%};walk_start_bit_exact=True;"
+        f"int8_bytes_ratio={int8_ratio:.2%}",
     ))
 
     os.makedirs("results", exist_ok=True)

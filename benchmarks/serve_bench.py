@@ -56,13 +56,14 @@ def _trace(cfg, n_requests: int, max_len: int):
 
 
 def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
-           paged, block_size, prompt_pad=None, telemetry=None):
+           paged, block_size, prompt_pad=None, telemetry=None,
+           kv_dtype="bf16"):
     from repro.serve import ContinuousBatcher, Request
 
     cb = ContinuousBatcher(
         cfg, params, n_slots=n_slots, cache_len=cache_len,
         prompt_len=prompt_pad, paged=paged, block_size=block_size,
-        telemetry=telemetry,
+        telemetry=telemetry, kv_dtype=kv_dtype,
     )
     for uid, p in enumerate(prompts):
         if not paged and prompt_pad is not None:  # pad to the shared length
@@ -155,11 +156,46 @@ def serve_bench() -> List[Row]:
         ),
     }
 
+    # -- int8 quantized-page leg (DESIGN.md §16) --------------------------
+    # Same trace through int8 pools: structurally identical drain (same
+    # ticks, same plans, same page counts), so the streamed-byte ratio vs
+    # the bf16 drain is purely the per-page byte ratio — codes at
+    # itemsize 1 plus the f32 scale row. The §14 predicted-vs-measured
+    # gate must stay within 1% on the quantized path too (byte accounting
+    # derives from the pool's true page_layer_bytes on both sides).
+    tel_q = ServeTelemetry()
+    paged_q, _, _ = _drain(
+        cfg, params, prompts, n_slots=n_slots, cache_len=cache_len,
+        new_tokens=new_tokens, paged=True, block_size=4, telemetry=tel_q,
+        kv_dtype="int8",
+    )
+    perf_q = tel_q.perf.summary()
+    assert perf_q["model_error_max"] <= 0.01, (
+        f"perf model error {perf_q['model_error_max']} exceeds 1% "
+        f"on the int8 serve trace: {perf_q}"
+    )
+    paged_q["perf"] = perf_q
+    sb_ratio = (
+        paged_q["streamed_bytes_total"] / paged["streamed_bytes_total"]
+    )
+    paged_q["streamed_bytes_ratio"] = round(sb_ratio, 4)
+    # the §16 acceptance bound: int8 decode ticks stream <= 55% of the
+    # bf16 page bytes over the same trace
+    assert sb_ratio <= 0.55, (
+        f"int8 drain streamed {paged_q['streamed_bytes_total']}B vs "
+        f"bf16 {paged['streamed_bytes_total']}B — ratio {sb_ratio}"
+    )
+    assert paged_q["ticks"] == paged["ticks"], (
+        "int8 drain changed the tick structure — the byte ratio is only "
+        "meaningful over an identical schedule"
+    )
+
     report = {
         "trace": {"n_requests": n_requests, "prompt_lens": lens,
                   "new_tokens": new_tokens, "n_slots": n_slots},
         "dense": dense,
         "paged": paged,
+        "paged_int8": paged_q,
         "prefill_padding_waste": round(
             1.0 - paged["prefill_tokens"] / dense["prefill_tokens"], 3
         ),
@@ -195,6 +231,14 @@ def serve_bench() -> List[Row]:
         "serve/paged_streamed_bytes", 0.0,
         f"total={paged['streamed_bytes_total']};"
         f"ticks_sampled={len(paged['per_tick_streamed_bytes'])}",
+    ))
+    rows.append((
+        "serve/paged_int8", paged_q["wall_s"] * 1e6,
+        f"streamed_bytes={paged_q['streamed_bytes_total']}/"
+        f"{paged['streamed_bytes_total']};"
+        f"ratio={sb_ratio:.2%};"
+        f"model_error_max={perf_q['model_error_max']:g};"
+        f"ticks={paged_q['ticks']}",
     ))
     phases = perf["phases"]
     rows.append((

@@ -14,6 +14,11 @@ without tracing:
          len(in_specs)` operands, and the kernel body's positional
          parameter count must equal prefetch + in_specs + outputs +
          scratch_shapes — a silent mismatch shifts every ref one slot.
+         A kernel taking `*refs` (the quantized/fp dual-layout bodies,
+         §16: the ref tuple depends on whether scale rows ride along)
+         instead satisfies the contract when its NAMED positionals do
+         not exceed the implied count — the vararg absorbs the
+         dtype-dependent tail.
   KC103  a `make_async_copy` that is created but never `.start()`ed or
          never `.wait()`ed: an un-awaited DMA is a read of garbage, an
          un-started one deadlocks the semaphore.
@@ -251,7 +256,21 @@ class _FunctionChecker:
             if kernel_fn is not None:
                 got = _positional_arity(kernel_fn)
                 want = n_prefetch + n_in + n_out + n_scratch
-                if got != want:
+                if kernel_fn.args.vararg is not None:
+                    # dual-layout body (`*refs`, §16): the vararg takes
+                    # the dtype-dependent tail; only an overshoot of the
+                    # named positionals can shift refs out of slot
+                    if got > want:
+                        self.err(
+                            "KC102", kernel_fn.lineno,
+                            f"kernel `{kernel_fn.name}` names {got} "
+                            f"positional refs before `*"
+                            f"{kernel_fn.args.vararg.arg}` but the grid "
+                            f"spec implies at most {want} ({n_prefetch} "
+                            f"prefetch + {n_in} in + {n_out} out + "
+                            f"{n_scratch} scratch)",
+                        )
+                elif got != want:
                     self.err(
                         "KC102", kernel_fn.lineno,
                         f"kernel `{kernel_fn.name}` takes {got} "

@@ -26,6 +26,12 @@ Python cannot enforce:
          exercised by at least one test file that also calls
          `check_invariants` — an uncovered mutator can corrupt the
          page-accounting invariants without any test noticing.
+  RL206  quantized-page dequantization outside `kernels/` (§16):
+         `dequantize_pages` / `load_kv_page` referenced anywhere but
+         `kernels/*` materializes fp pages outside the kernels' page
+         fold, forfeiting the streamed-byte win the int8 pools exist
+         for. The models/serve layers get exactly one opaque append
+         primitive, `requantize_page_update`.
 
 Rules are scoped (documented above) so the committed baseline for
 `src/` stays EMPTY: a finding from this layer is a real violation, not
@@ -48,6 +54,9 @@ _IMPL_HOME = "kernels/ops.py"
 _TELEMETRY_SCOPE = ("serve/scheduler.py", "serve/engine.py")
 #: RL204 allowlist inside serve/ + obs/ (see module docstring)
 _CLOCK_ALLOWED = ("obs/metrics.py", "obs/events.py", "obs/regress.py")
+#: RL206: dequantization primitives that must stay inside kernels/ —
+#: everything else appends through `requantize_page_update` (§16)
+_DEQUANT_NAMES = frozenset({"dequantize_pages", "load_kv_page"})
 
 _WALL_CLOCK_CALLS = frozenset({
     "time.time", "time.monotonic", "time.perf_counter",
@@ -96,8 +105,28 @@ def _check_module(tree: ast.Module, rel: str, disp: str
     clock_scope = (
         rel.startswith(("serve/", "obs/")) and rel not in _CLOCK_ALLOWED
     )
+    dequant_scope = not rel.startswith("kernels/")
 
     for node in ast.walk(tree):
+        if dequant_scope and (
+            (isinstance(node, ast.Name) and node.id in _DEQUANT_NAMES)
+            or (isinstance(node, ast.Attribute)
+                and node.attr in _DEQUANT_NAMES)
+            or (isinstance(node, ast.ImportFrom) and any(
+                a.name in _DEQUANT_NAMES for a in node.names))
+        ):
+            ref = (
+                node.id if isinstance(node, ast.Name)
+                else node.attr if isinstance(node, ast.Attribute)
+                else next(a.name for a in node.names
+                          if a.name in _DEQUANT_NAMES)
+            )
+            findings.append(Finding(
+                "RL206", disp, node.lineno, "error",
+                f"`{ref}` referenced outside kernels/ — dequantization "
+                "happens only inside the paged page-fold (§16); append "
+                "through the opaque `requantize_page_update` instead",
+            ))
         if (
             in_serve and rel != _JIT_HOME
             and isinstance(node, ast.Attribute)

@@ -47,9 +47,11 @@ from .ops import resolve_impl
 from .paged_common import (
     NEG_INF,
     bucketed_page_dispatch,
+    check_quantized_operands as _check_quantized,
     double_buffered_page_walk,
     effective_walk_start,
     finalize_online_softmax,
+    load_kv_page,
     online_softmax_fold,
     reset_online_softmax,
 )
@@ -61,23 +63,30 @@ def _paged_decode_kernel(
     st_ref,       # [B] int32 — first live block per slot (walk start)
     len_ref,      # [B] int32
     win_ref,      # [1] int32
-    # blocked / ANY operands
-    q_ref,        # [1, H, hd] VMEM block of slot i
-    kp_hbm,       # [n_blocks, bs, KV, hd] — ANY/HBM, never blocked in
-    vp_hbm,
-    out_ref,      # [1, H, hd] f32 VMEM block of slot i
-    # scratch
-    k_buf,        # [2, bs, KV, hd] double-buffered page landing zone
-    v_buf,
-    m_s,          # [KV, g] f32 — online-softmax running max
-    l_s,          # [KV, g] f32 — running normalizer
-    acc_s,        # [KV, g, hd] f32 — running weighted values
-    sem,          # DMA semaphores [2 buffers, 2 pools]
-    *,
+    # blocked / ANY operands, then outputs, then scratch — the exact
+    # tuple depends on `quantized` (int8 pools add the two per-page
+    # scale arrays, their landing buffers, and two semaphore lanes)
+    *refs,
+    # float path refs:
+    #   q_ref [1, H, hd] VMEM | kp_hbm, vp_hbm [n_blocks, bs, KV, hd]
+    #   ANY/HBM | out_ref [1, H, hd] f32 VMEM | k_buf, v_buf
+    #   [2, bs, KV, hd] | m_s, l_s [KV, g] f32 | acc_s [KV, g, hd] f32 |
+    #   sem [2, 2]
+    # quantized path inserts ks_hbm/vs_hbm [n_blocks, KV] f32 after the
+    # pools, ks_buf/vs_buf [2, KV] f32 after the page buffers, and sem
+    # widens to [2, 4]
     n_kv: int,
     block_size: int,
     depth: int,   # walk depth of THIS launch (<= table width)
+    quantized: bool,
 ):
+    if quantized:
+        (q_ref, kp_hbm, vp_hbm, ks_hbm, vs_hbm, out_ref,
+         k_buf, v_buf, ks_buf, vs_buf, m_s, l_s, acc_s, sem) = refs
+    else:
+        (q_ref, kp_hbm, vp_hbm, out_ref,
+         k_buf, v_buf, m_s, l_s, acc_s, sem) = refs
+        ks_hbm = vs_hbm = ks_buf = vs_buf = None
     i = pl.program_id(0)               # slot
     j = pl.program_id(1)               # kv block within the slot's table
     n_steps = pl.num_programs(0) * depth
@@ -92,6 +101,7 @@ def _paged_decode_kernel(
     cur = double_buffered_page_walk(
         step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem,
         start_ref=st_ref,
+        ks_hbm=ks_hbm, vs_hbm=vs_hbm, ks_buf=ks_buf, vs_buf=vs_buf,
     )
 
     # -- online-softmax fold (identical math to the ref oracle) -----------
@@ -103,8 +113,7 @@ def _paged_decode_kernel(
     window = win_ref[0]
     q_pos = length - 1
     qf = q_ref[0].reshape(n_kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
-    kj = k_buf[cur].astype(jnp.float32)                  # [bs, KV, hd]
-    vj = v_buf[cur].astype(jnp.float32)
+    kj, vj = load_kv_page(k_buf, v_buf, cur, ks_buf, vs_buf)
 
     scores = jnp.einsum("kgh,skh->kgs", qf, kj)          # [KV, g, bs]
     col = effective_walk_start(st_ref, i, depth, mb) + j
@@ -130,6 +139,8 @@ def paged_decode_attention(
     lengths: jnp.ndarray,      # [B] int32
     window: jnp.ndarray,       # scalar / [1] int32
     *,
+    k_scales: jnp.ndarray | None = None,     # [n_blocks, KV] f32 per-page
+    v_scales: jnp.ndarray | None = None,     # scales (int8 pools only)
     block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     depth: int | None = None,  # walk depth; None = full table width
     interpret: bool = False,
@@ -144,11 +155,17 @@ def paged_decode_attention(
     first live block: a sliding-window layer retires its leading blocks
     (DESIGN.md §12), and the walk starts past them — retired columns
     point at scratch and are fully window-masked, so any start <= the
-    true first live block is bit-exact (start 0 = the full walk)."""
+    true first live block is bit-exact (start 0 = the full walk).
+
+    `k_scales`/`v_scales` are required iff the pools are int8
+    (DESIGN.md §16): the walk then streams each page's scale row beside
+    it and the fold dequantizes in-register — same kernel body, no
+    second code path."""
     b, h, hd = q.shape
     n_blocks, bs, n_kv, hd2 = k_pages.shape
     assert hd2 == hd, (hd2, hd)
     assert h % n_kv == 0, (h, n_kv)
+    quantized = _check_quantized(k_pages, k_scales, v_scales)
     mb = block_table.shape[1]
     depth = mb if depth is None else depth
     assert 1 <= depth <= mb, (depth, mb)
@@ -157,25 +174,36 @@ def paged_decode_attention(
     if block_start is None:
         block_start = jnp.zeros((b,), jnp.int32)
     kernel = functools.partial(
-        _paged_decode_kernel, n_kv=n_kv, block_size=bs, depth=depth
+        _paged_decode_kernel, n_kv=n_kv, block_size=bs, depth=depth,
+        quantized=quantized,
+    )
+    pool_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] * (
+        4 if quantized else 2
+    )
+    scale_scratch = (
+        [pltpu.VMEM((2, n_kv), jnp.float32)] * 2 if quantized else []
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,   # block_table, block_start, lengths, window
         grid=(b, depth),
         in_specs=[
             pl.BlockSpec((1, h, hd), lambda i, j, *_: (i, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
-            pl.BlockSpec(memory_space=pltpu.ANY),   # V pool stays in HBM
+            *pool_specs,         # K/V pools (+ scale arrays) stay in HBM
         ],
         out_specs=pl.BlockSpec((1, h, hd), lambda i, j, *_: (i, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((2, bs, n_kv, hd), k_pages.dtype),
             pltpu.VMEM((2, bs, n_kv, hd), v_pages.dtype),
+            *scale_scratch,
             pltpu.VMEM((n_kv, g), jnp.float32),
             pltpu.VMEM((n_kv, g), jnp.float32),
             pltpu.VMEM((n_kv, g, hd), jnp.float32),
-            pltpu.SemaphoreType.DMA((2, 2)),
+            pltpu.SemaphoreType.DMA((2, 4 if quantized else 2)),
         ],
+    )
+    pools = (
+        (k_pages, v_pages, k_scales, v_scales) if quantized
+        else (k_pages, v_pages)
     )
     return pl.pallas_call(
         kernel,
@@ -183,7 +211,7 @@ def paged_decode_attention(
         out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
         interpret=interpret,
     )(block_table.astype(jnp.int32), block_start.astype(jnp.int32),
-      lengths.astype(jnp.int32), win, q, k_pages, v_pages)
+      lengths.astype(jnp.int32), win, q, *pools)
 
 
 def paged_decode_attention_bucketed(
@@ -196,6 +224,8 @@ def paged_decode_attention_bucketed(
     plan,                      # ops.BucketPlan (static)
     perm,                      # int32 [sum counts] (dynamic)
     *,
+    k_scales: jnp.ndarray | None = None,     # [n_blocks, KV] f32
+    v_scales: jnp.ndarray | None = None,     # (int8 pools only)
     block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     interpret: bool = False,
 ) -> jnp.ndarray:
@@ -205,13 +235,16 @@ def paged_decode_attention_bucketed(
     identical to the single launch on every slot with length >= 1.
     With `block_start` (DESIGN.md §12) the plan may bucket windowed
     slots by LIVE trailing blocks — each launch walks
-    [start, start + bound) of the gathered rows."""
+    [start, start + bound) of the gathered rows. Scale arrays (int8
+    pools) pass through whole, like the pools — only per-slot rows are
+    bucket-gathered."""
     if block_start is None:
         block_start = jnp.zeros(lengths.shape, jnp.int32)
 
     def launch(bound, bt_rows, q_rows, len_rows, start_rows):
         return paged_decode_attention(
             q_rows, k_pages, v_pages, bt_rows, len_rows, window,
+            k_scales=k_scales, v_scales=v_scales,
             block_start=start_rows, depth=bound, interpret=interpret,
         )
 
@@ -230,6 +263,8 @@ def paged_attention(
     window: jnp.ndarray,
     *,
     impl: str = "auto",
+    k_scales=None,
+    v_scales=None,
     plan=None,
     perm=None,
     block_start=None,
@@ -243,18 +278,23 @@ def paged_attention(
     dispatch on the kernel paths; the oracle is a dense gather with no
     page walk to bound, so `ref` mode ignores them (and `block_start` —
     retired columns are window-masked either way). `plan=None` is the
-    single-launch path."""
+    single-launch path. `k_scales`/`v_scales` (required iff the pools
+    are int8, DESIGN.md §16) follow the pools down every arm."""
+    _check_quantized(k_pages, k_scales, v_scales)
     mode = resolve_impl(impl)
     if mode == "ref":
         return ref.paged_attention_ref(
-            q, k_pages, v_pages, block_table, lengths, window
+            q, k_pages, v_pages, block_table, lengths, window,
+            k_scales=k_scales, v_scales=v_scales,
         )
     if plan is not None:
         return paged_decode_attention_bucketed(
             q, k_pages, v_pages, block_table, lengths, window, plan, perm,
+            k_scales=k_scales, v_scales=v_scales,
             block_start=block_start, interpret=(mode == "interpret"),
         )
     return paged_decode_attention(
         q, k_pages, v_pages, block_table, lengths, window,
+        k_scales=k_scales, v_scales=v_scales,
         block_start=block_start, interpret=(mode == "interpret"),
     )

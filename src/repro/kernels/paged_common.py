@@ -11,6 +11,15 @@ in exactly one place and cannot diverge between the kernels
 (DESIGN.md §10). The bucketed dispatch scaffold (DESIGN.md §11) lives
 here too: one launch per occupancy bucket, each walking only the bucket
 bound instead of the full table depth.
+
+Quantized KV pages (DESIGN.md §16) are also anchored here: the per-page
+int8 code <-> float conversion (`quantize_pages` / `dequantize_pages` /
+`requantize_page_update`) and the in-register dequant on the kernel path
+(`load_kv_page`, fed by the scale rows the page walk double-buffers next
+to each K/V page). This is the ONLY module where quantized page codes
+turn back into floats — the models/serve layers call
+`requantize_page_update` for appends and otherwise move codes around
+opaquely (analysis rule RL206 pins this).
 """
 
 from __future__ import annotations
@@ -21,6 +30,87 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+#: symmetric int8 quantization ceiling — codes live in [-128, 127], the
+#: per-(page, head) absmax maps to ±127 (same convention as the weight
+#: path's `ref.quantize_ref`)
+INT8_QMAX = 127.0
+
+
+def quantize_pages(pages):
+    """Per-page, per-head symmetric int8 quantization of KV pages.
+
+    `pages` is float [..., bs, KV, hd] (any number of leading page
+    axes); returns `(codes int8 [..., bs, KV, hd], scales f32 [..., KV])`
+    with `scale = absmax / 127` over each page's (bs, hd) plane per KV
+    head. All-zero planes take scale 1.0 (the guard keeps dequant exact
+    at 0 and division well-defined), matching `ref.quantize_ref`.
+    """
+    f = pages.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(f), axis=(-3, -1))
+    scales = jnp.where(absmax > 0, absmax / INT8_QMAX, 1.0)
+    scales = scales.astype(jnp.float32)
+    codes = jnp.clip(
+        jnp.round(f / scales[..., None, :, None]),
+        -(INT8_QMAX + 1), INT8_QMAX,
+    ).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_pages(codes, scales):
+    """Inverse of `quantize_pages`: int8 codes [..., bs, KV, hd] times
+    their per-(page, head) f32 scales [..., KV] -> f32 pages. The single
+    home of code->float conversion (RL206); the oracles and the append
+    path both route through here."""
+    return codes.astype(jnp.float32) * scales[..., None, :, None]
+
+
+def requantize_page_update(codes, scales, update_fn):
+    """Read-modify-write on quantized pages: dequantize the touched
+    pages, apply `update_fn` on the float view (scatter new tokens in),
+    and requantize under the updated per-head absmax. This is how every
+    append lands in an int8 pool — the page's scale tracks its true
+    content, at the cost of one rounding pass over the page's existing
+    codes per append (bounded drift, covered by the tolerance parity
+    tests)."""
+    return quantize_pages(update_fn(dequantize_pages(codes, scales)))
+
+
+def check_quantized_operands(k_pages, k_scales, v_scales) -> bool:
+    """Validate the pool-dtype/scale pairing of one launch and return
+    whether it is the quantized path: int8 pools MUST bring both
+    per-page scale arrays, float pools must bring none — a mismatch is a
+    caller bug (a scale array silently ignored, or codes folded as
+    values), never something to paper over."""
+    quantized = jnp.issubdtype(k_pages.dtype, jnp.integer)
+    if quantized and (k_scales is None or v_scales is None):
+        raise ValueError(
+            f"int8 KV pools (dtype {k_pages.dtype}) require k_scales and "
+            "v_scales — quantized pages are meaningless without their "
+            "per-page scale rows (DESIGN.md §16)"
+        )
+    if not quantized and (k_scales is not None or v_scales is not None):
+        raise ValueError(
+            f"float KV pools (dtype {k_pages.dtype}) must not pass "
+            "k_scales/v_scales — the scale operands only ride quantized "
+            "pools (DESIGN.md §16)"
+        )
+    return bool(quantized)
+
+
+def load_kv_page(k_buf, v_buf, cur, ks_buf=None, vs_buf=None):
+    """Read buffer `cur`'s K/V page as f32 for the fold — the
+    in-register dequant point of the quantized path (DESIGN.md §16):
+    with scale buffers riding the walk, each code multiplies its page's
+    per-head scale right here, between the DMA wait and the softmax
+    fold. `ks_buf=None` is the float path (plain astype, unchanged
+    math)."""
+    kj = k_buf[cur].astype(jnp.float32)
+    vj = v_buf[cur].astype(jnp.float32)
+    if ks_buf is not None:
+        kj = kj * ks_buf[cur].reshape(1, -1, 1)
+        vj = vj * vs_buf[cur].reshape(1, -1, 1)
+    return kj, vj
 
 
 def effective_walk_start(start_ref, slot, depth: int, table_width: int):
@@ -55,23 +145,34 @@ def double_buffered_page_walk(
     vp_hbm,       # V pool
     k_buf,        # [2, bs, KV, hd] VMEM landing buffers
     v_buf,
-    sem,          # DMA semaphores [2 buffers, 2 pools]
+    sem,          # DMA semaphores [2 buffers, 2 pools] (float path) or
+                  # [2, 4] when the scale rows ride along (int8 path)
     start_ref=None,  # [B] int32 first live block per slot (scalar
                      # prefetch) — None keeps the column-0 walk
+    ks_hbm=None,  # [n_blocks, KV] f32 per-page K scales — ANY/HBM ref
+                  # (quantized pools only, DESIGN.md §16)
+    vs_hbm=None,  # V scales
+    ks_buf=None,  # [2, KV] f32 VMEM scale landing buffers
+    vs_buf=None,
 ):
     """Run one grid step of the double-buffered block walk: start the
     copies for step+1, wait for this step's pages, and return the buffer
-    index now holding them (read `k_buf[cur]` / `v_buf[cur]`)."""
+    index now holding them (read `k_buf[cur]` / `v_buf[cur]`, or
+    `load_kv_page` to fold the scale rows in). On quantized pools the
+    per-page scale rows are double-buffered with the same schedule as
+    their pages — two extra (tiny) DMAs per step on semaphore lanes
+    2/3."""
     table_width = bt_ref.shape[1]
 
     def page_copies(s, slot):
-        """The two async page copies (K and V pools) of linear step `s`
-        into buffer `slot` — recreated identically to start and to wait."""
+        """The async page copies (K and V pools, plus their scale rows on
+        quantized pools) of linear step `s` into buffer `slot` —
+        recreated identically to start and to wait."""
         col = effective_walk_start(
             start_ref, s // depth, depth, table_width
         ) + s % depth
         page = bt_ref[s // depth, col]
-        return (
+        copies = (
             pltpu.make_async_copy(
                 kp_hbm.at[pl.ds(page, 1)], k_buf.at[pl.ds(slot, 1)],
                 sem.at[slot, 0],
@@ -81,6 +182,18 @@ def double_buffered_page_walk(
                 sem.at[slot, 1],
             ),
         )
+        if ks_hbm is not None:
+            copies += (
+                pltpu.make_async_copy(
+                    ks_hbm.at[pl.ds(page, 1)], ks_buf.at[pl.ds(slot, 1)],
+                    sem.at[slot, 2],
+                ),
+                pltpu.make_async_copy(
+                    vs_hbm.at[pl.ds(page, 1)], vs_buf.at[pl.ds(slot, 1)],
+                    sem.at[slot, 3],
+                ),
+            )
+        return copies
 
     @pl.when(step == 0)
     def _():

@@ -57,9 +57,11 @@ from .ops import resolve_impl
 from .paged_common import (
     NEG_INF,
     bucketed_page_dispatch,
+    check_quantized_operands as _check_quantized,
     double_buffered_page_walk,
     effective_walk_start,
     finalize_online_softmax,
+    load_kv_page,
     online_softmax_fold,
     reset_online_softmax,
 )
@@ -72,23 +74,30 @@ def _paged_prefill_kernel(
     start_ref,    # [B] int32
     total_ref,    # [B] int32
     win_ref,      # [1] int32
-    # blocked / ANY operands
-    q_ref,        # [1, T, H, hd] VMEM block of slot i
-    kp_hbm,       # [n_blocks, bs, KV, hd] — ANY/HBM, never blocked in
-    vp_hbm,
-    out_ref,      # [1, T, H, hd] f32 VMEM block of slot i
-    # scratch
-    k_buf,        # [2, bs, KV, hd] double-buffered page landing zone
-    v_buf,
-    m_s,          # [KV, g, T] f32
-    l_s,          # [KV, g, T] f32
-    acc_s,        # [KV, g, T, hd] f32
-    sem,          # DMA semaphores [2 buffers, 2 pools]
-    *,
+    # blocked / ANY operands, then outputs, then scratch — the exact
+    # tuple depends on `quantized` (int8 pools add the two per-page
+    # scale arrays, their landing buffers, and two semaphore lanes)
+    *refs,
+    # float path refs:
+    #   q_ref [1, T, H, hd] VMEM | kp_hbm, vp_hbm [n_blocks, bs, KV, hd]
+    #   ANY/HBM | out_ref [1, T, H, hd] f32 VMEM | k_buf, v_buf
+    #   [2, bs, KV, hd] | m_s, l_s [KV, g, T] f32 | acc_s [KV, g, T, hd]
+    #   f32 | sem [2, 2]
+    # quantized path inserts ks_hbm/vs_hbm [n_blocks, KV] f32 after the
+    # pools, ks_buf/vs_buf [2, KV] f32 after the page buffers, and sem
+    # widens to [2, 4]
     n_kv: int,
     block_size: int,
     depth: int,   # walk depth of THIS launch (<= table width)
+    quantized: bool,
 ):
+    if quantized:
+        (q_ref, kp_hbm, vp_hbm, ks_hbm, vs_hbm, out_ref,
+         k_buf, v_buf, ks_buf, vs_buf, m_s, l_s, acc_s, sem) = refs
+    else:
+        (q_ref, kp_hbm, vp_hbm, out_ref,
+         k_buf, v_buf, m_s, l_s, acc_s, sem) = refs
+        ks_hbm = vs_hbm = ks_buf = vs_buf = None
     i = pl.program_id(0)               # slot
     j = pl.program_id(1)               # kv block within the slot's table
     n_steps = pl.num_programs(0) * depth
@@ -103,6 +112,7 @@ def _paged_prefill_kernel(
     cur = double_buffered_page_walk(
         step, n_steps, bt_ref, depth, kp_hbm, vp_hbm, k_buf, v_buf, sem,
         start_ref=blk_ref,
+        ks_hbm=ks_hbm, vs_hbm=vs_hbm, ks_buf=ks_buf, vs_buf=vs_buf,
     )
 
     # -- online-softmax fold (identical math to the ref oracle) -----------
@@ -117,8 +127,7 @@ def _paged_prefill_kernel(
     qf = (
         q_ref[0].reshape(t, n_kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
     )
-    kj = k_buf[cur].astype(jnp.float32)                  # [bs, KV, hd]
-    vj = v_buf[cur].astype(jnp.float32)
+    kj, vj = load_kv_page(k_buf, v_buf, cur, ks_buf, vs_buf)
 
     scores = jnp.einsum("tkgh,skh->kgts", qf, kj)        # [KV, g, T, bs]
     col = effective_walk_start(blk_ref, i, depth, mb) + j
@@ -150,6 +159,8 @@ def paged_prefill_attention(
     total: jnp.ndarray,        # [B] int32
     window: jnp.ndarray,       # scalar / [1] int32
     *,
+    k_scales: jnp.ndarray | None = None,     # [n_blocks, KV] f32 per-page
+    v_scales: jnp.ndarray | None = None,     # scales (int8 pools only)
     block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     depth: int | None = None,  # walk depth; None = full table width
     interpret: bool = False,
@@ -163,11 +174,17 @@ def paged_prefill_attention(
     KV is silently skipped. `block_start` (default zeros) is the first
     live block per slot (DESIGN.md §12) — retired head columns point at
     scratch and are window-masked, so any start <= the true first live
-    block is bit-exact."""
+    block is bit-exact.
+
+    `k_scales`/`v_scales` are required iff the pools are int8
+    (DESIGN.md §16): the walk then streams each page's scale row beside
+    it and the fold dequantizes in-register — same kernel body, no
+    second code path."""
     b, t, h, hd = q.shape
     n_blocks, bs, n_kv, hd2 = k_pages.shape
     assert hd2 == hd, (hd2, hd)
     assert h % n_kv == 0, (h, n_kv)
+    quantized = _check_quantized(k_pages, k_scales, v_scales)
     mb = block_table.shape[1]
     depth = mb if depth is None else depth
     assert 1 <= depth <= mb, (depth, mb)
@@ -176,25 +193,36 @@ def paged_prefill_attention(
     if block_start is None:
         block_start = jnp.zeros((b,), jnp.int32)
     kernel = functools.partial(
-        _paged_prefill_kernel, n_kv=n_kv, block_size=bs, depth=depth
+        _paged_prefill_kernel, n_kv=n_kv, block_size=bs, depth=depth,
+        quantized=quantized,
+    )
+    pool_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] * (
+        4 if quantized else 2
+    )
+    scale_scratch = (
+        [pltpu.VMEM((2, n_kv), jnp.float32)] * 2 if quantized else []
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,   # table, block_start, start, total, window
         grid=(b, depth),
         in_specs=[
             pl.BlockSpec((1, t, h, hd), lambda i, j, *_: (i, 0, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
-            pl.BlockSpec(memory_space=pltpu.ANY),   # V pool stays in HBM
+            *pool_specs,         # K/V pools (+ scale arrays) stay in HBM
         ],
         out_specs=pl.BlockSpec((1, t, h, hd), lambda i, j, *_: (i, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((2, bs, n_kv, hd), k_pages.dtype),
             pltpu.VMEM((2, bs, n_kv, hd), v_pages.dtype),
+            *scale_scratch,
             pltpu.VMEM((n_kv, g, t), jnp.float32),
             pltpu.VMEM((n_kv, g, t), jnp.float32),
             pltpu.VMEM((n_kv, g, t, hd), jnp.float32),
-            pltpu.SemaphoreType.DMA((2, 2)),
+            pltpu.SemaphoreType.DMA((2, 4 if quantized else 2)),
         ],
+    )
+    pools = (
+        (k_pages, v_pages, k_scales, v_scales) if quantized
+        else (k_pages, v_pages)
     )
     return pl.pallas_call(
         kernel,
@@ -203,7 +231,7 @@ def paged_prefill_attention(
         interpret=interpret,
     )(block_table.astype(jnp.int32), block_start.astype(jnp.int32),
       jnp.asarray(start, jnp.int32), jnp.asarray(total, jnp.int32), win,
-      q, k_pages, v_pages)
+      q, *pools)
 
 
 def paged_prefill_attention_bucketed(
@@ -217,6 +245,8 @@ def paged_prefill_attention_bucketed(
     plan,                      # ops.BucketPlan (static)
     perm,                      # int32 [sum counts] (dynamic)
     *,
+    k_scales: jnp.ndarray | None = None,     # [n_blocks, KV] f32
+    v_scales: jnp.ndarray | None = None,     # (int8 pools only)
     block_start: jnp.ndarray | None = None,  # [B] int32 first live block
     interpret: bool = False,
 ) -> jnp.ndarray:
@@ -224,14 +254,16 @@ def paged_prefill_attention_bucketed(
     launch per occupancy bucket (slots grouped by ceil(total / bs), or
     by live trailing blocks when `block_start` rides along — DESIGN.md
     §12), each bounded at the bucket's walk depth. Bit-identical to the
-    single launch on every valid query row (start + t < total)."""
+    single launch on every valid query row (start + t < total). Scale
+    arrays (int8 pools) pass through whole, like the pools."""
     if block_start is None:
         block_start = jnp.zeros(start.shape, jnp.int32)
 
     def launch(bound, bt_rows, q_rows, start_rows, total_rows, blk_rows):
         return paged_prefill_attention(
             q_rows, k_pages, v_pages, bt_rows, start_rows, total_rows,
-            window, block_start=blk_rows, depth=bound, interpret=interpret,
+            window, k_scales=k_scales, v_scales=v_scales,
+            block_start=blk_rows, depth=bound, interpret=interpret,
         )
 
     return bucketed_page_dispatch(
@@ -251,6 +283,8 @@ def paged_prefill(
     window: jnp.ndarray,
     *,
     impl: str = "auto",
+    k_scales=None,
+    v_scales=None,
     plan=None,
     perm=None,
     block_start=None,
@@ -264,19 +298,24 @@ def paged_prefill(
     select the bucketed dispatch on the kernel paths; the oracle is a
     dense gather with no page walk to bound, so `ref` mode ignores them
     (and `block_start` — retired columns are masked either way).
-    `plan=None` is the single-launch path."""
+    `plan=None` is the single-launch path. `k_scales`/`v_scales`
+    (required iff the pools are int8, DESIGN.md §16) follow the pools
+    down every arm."""
+    _check_quantized(k_pages, k_scales, v_scales)
     mode = resolve_impl(impl)
     if mode == "ref":
         return ref.paged_prefill_ref(
-            q, k_pages, v_pages, block_table, start, total, window
+            q, k_pages, v_pages, block_table, start, total, window,
+            k_scales=k_scales, v_scales=v_scales,
         )
     if plan is not None:
         return paged_prefill_attention_bucketed(
             q, k_pages, v_pages, block_table, start, total, window,
-            plan, perm, block_start=block_start,
-            interpret=(mode == "interpret"),
+            plan, perm, k_scales=k_scales, v_scales=v_scales,
+            block_start=block_start, interpret=(mode == "interpret"),
         )
     return paged_prefill_attention(
         q, k_pages, v_pages, block_table, start, total, window,
+        k_scales=k_scales, v_scales=v_scales,
         block_start=block_start, interpret=(mode == "interpret"),
     )

@@ -148,6 +148,20 @@ def dequantize_ref(planes, scale, n_bits: int, group: int = 1) -> jnp.ndarray:
 NEG_INF = -1e30
 
 
+def _gather_kv_dense(pages, block_table, scales=None):
+    """Dense-gather one pool's pages per slot, dequantizing int8 codes
+    through `paged_common.dequantize_pages` when the per-page scales ride
+    along (DESIGN.md §16) — the oracle-side twin of the kernels'
+    in-fold dequant."""
+    b, mb = block_table.shape
+    _, bs, kv, hd = pages.shape
+    gathered = pages[block_table]                          # [B, mb, bs, KV, hd]
+    if scales is not None:
+        from .paged_common import dequantize_pages
+        gathered = dequantize_pages(gathered, scales[block_table])
+    return gathered.reshape(b, mb * bs, kv, hd)
+
+
 def paged_attention_ref(
     q: jnp.ndarray,            # [B, H, hd] — one query token per slot
     k_pages: jnp.ndarray,      # [n_blocks, block_size, KV, hd]
@@ -155,19 +169,23 @@ def paged_attention_ref(
     block_table: jnp.ndarray,  # [B, max_blocks] int32 page ids per slot
     lengths: jnp.ndarray,      # [B] int32 valid KV count per slot
     window: jnp.ndarray,       # scalar int32; kv_pos > q_pos - window
+    k_scales: jnp.ndarray | None = None,  # [n_blocks, KV] f32 per-page
+    v_scales: jnp.ndarray | None = None,  # scales (int8 pools only)
 ) -> jnp.ndarray:
     """Oracle: gather every slot's pages dense, masked GQA softmax.
 
     Logical kv position of page j, row r is `j*block_size + r`; the query
     sits at `lengths-1`. Matches the kernel's `acc / max(l, eps)` epilogue
-    so empty slots (length 0) produce finite garbage, not NaNs.
+    so empty slots (length 0) produce finite garbage, not NaNs. With
+    `k_scales`/`v_scales` the gathered int8 codes dequantize before the
+    fold — the tolerance-parity anchor of the quantized kernel path.
     """
     b, h, hd = q.shape
     _, bs, kv, _ = k_pages.shape
     mb = block_table.shape[1]
     g = h // kv
-    k = k_pages[block_table].reshape(b, mb * bs, kv, hd)   # [B, S, KV, hd]
-    v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    k = _gather_kv_dense(k_pages, block_table, k_scales)   # [B, S, KV, hd]
+    v = _gather_kv_dense(v_pages, block_table, v_scales)
     kv_pos = jnp.arange(mb * bs, dtype=jnp.int32)
     q_pos = (lengths - 1)[:, None]
     ok = (kv_pos[None, :] < lengths[:, None]) & (kv_pos[None, :] > q_pos - window)
@@ -193,6 +211,8 @@ def paged_prefill_ref(
     start: jnp.ndarray,        # [B] int32 — position of the first suffix token
     total: jnp.ndarray,        # [B] int32 — full valid length (prefix + suffix)
     window: jnp.ndarray,       # scalar int32; kv_pos > q_pos - window
+    k_scales: jnp.ndarray | None = None,  # [n_blocks, KV] f32 per-page
+    v_scales: jnp.ndarray | None = None,  # scales (int8 pools only)
 ) -> jnp.ndarray:
     """Oracle for the paged-prefill kernel (DESIGN.md §9): suffix query
     row t sits at logical position `start + t` and attends, through the
@@ -202,13 +222,15 @@ def paged_prefill_ref(
     sliding window. The suffix KV must already be scattered into the
     pools. Padded query rows (start + t >= total) produce don't-care
     outputs; same `acc / max(l, eps)` epilogue as the decode oracle.
+    With `k_scales`/`v_scales` the gathered int8 codes dequantize before
+    the fold (DESIGN.md §16).
     """
     b, t, h, hd = q.shape
     _, bs, kv, _ = k_pages.shape
     mb = block_table.shape[1]
     g = h // kv
-    k = k_pages[block_table].reshape(b, mb * bs, kv, hd)   # [B, S, KV, hd]
-    v = v_pages[block_table].reshape(b, mb * bs, kv, hd)
+    k = _gather_kv_dense(k_pages, block_table, k_scales)   # [B, S, KV, hd]
+    v = _gather_kv_dense(v_pages, block_table, v_scales)
     kv_pos = jnp.arange(mb * bs, dtype=jnp.int32)[None, None, :]
     q_pos = (start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :])[..., None]
     ok = (

@@ -61,6 +61,13 @@ def main():
     ap.add_argument("--eos", type=int, default=-1,
                     help="EOS token id: a slot emitting it stops early and "
                          "frees its pages that tick (-1 = never)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8"],
+                    help="paged KV page-pool storage (DESIGN.md §16): "
+                         "'int8' stores per-page-scaled quantized pages "
+                         "— ~2x less resident/streamed KV, dequantized "
+                         "inside the kernels' page fold (requires "
+                         "--paged)")
     ap.add_argument("--kernel-impl", default="auto",
                     choices=["auto", "pallas", "pallas_interpret", "ref"],
                     help="paged-attention kernel path; explicit values are "
@@ -90,6 +97,9 @@ def main():
     if args.prefix and not args.paged:
         ap.error("--prefix requires --paged (the prefix index shares "
                  "pages of the block-paged KV cache)")
+    if args.kv_dtype != "bf16" and not args.paged:
+        ap.error("--kv-dtype int8 requires --paged (quantized pages "
+                 "live in the block-paged pools)")
 
     cfg = get_config(args.arch, smoke=True)
     params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -117,6 +127,7 @@ def main():
         eos_token=args.eos, kernel_impl=args.kernel_impl,
         bucket_strategy=args.bucket_strategy,
         window_retirement=not args.no_window_retirement,
+        kv_dtype=args.kv_dtype,
         telemetry=telemetry,
     )
     key = jax.random.PRNGKey(1)
@@ -150,6 +161,9 @@ def main():
         print(f"  prefill tokens processed: {batcher.prefill_tokens}, "
               f"pages allocated: {pc.pages_allocated}, COW: {pc.cow_events}, "
               f"window-retired: {pc.pages_retired}")
+        print(f"  kv pool dtype: {pc.kv_dtype}, "
+              f"page-layer bytes: {pc.page_layer_bytes} "
+              f"(true itemsize, scales included)")
         if len(pc.pools) > 1:  # layer-major groups (DESIGN.md §12)
             for p in pc.pools:
                 kind = "global" if p.window is None else f"window={p.window}"

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.paged_attention import paged_attention
+from ..kernels.paged_common import requantize_page_update
 from ..kernels.paged_prefill import paged_prefill
 from ..quant.bitplane import pim_linear
 from .common import NEG_INF, Params, apply_rope, dense_init, split_keys
@@ -308,7 +309,9 @@ def attention_decode_paged(
     bucket_plans=None,
     bucket_perms=None,
     plan_class=None,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    k_scales: Optional[jnp.ndarray] = None,  # [n_blocks, KV] f32 (int8 pools)
+    v_scales: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, ...]:
     """One-token decode against a block-paged cache (DESIGN.md §8).
 
     Unlike `attention_decode` there is no global write position: each slot
@@ -324,6 +327,15 @@ def attention_decode_paged(
     table, `block_start` its per-slot first live block (sliding-window
     retirement), and `bucket_plans`/`bucket_perms`/`plan_class` select
     the layer group's bucket-plan variant (see `_select_bucket_plan`).
+
+    Quantized pools (DESIGN.md §16): `k_scales`/`v_scales` are this
+    layer's per-page per-head scale rows. The fresh KV row appends via
+    an opaque read-modify-write requantization of the ONE touched page
+    (`kernels.paged_common.requantize_page_update` — this layer never
+    dequantizes anything itself, analysis rule RL206), and the updated
+    scales flow into the kernel and back to the caller: the return
+    grows to a 5-tuple `(out, k_pages, v_pages, k_scales, v_scales)`.
+    With `k_scales=None` the float path is byte-for-byte the PR 8 code.
     """
     b = x.shape[0]
     bs = k_pages.shape[1]
@@ -332,8 +344,27 @@ def attention_decode_paged(
     k = apply_rope(k, positions[:, None], rope_theta)
     page = block_table[jnp.arange(b), positions // bs]      # [B]
     offset = positions % bs
-    k_pages = k_pages.at[page, offset].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[page, offset].set(v[:, 0].astype(v_pages.dtype))
+    if k_scales is None:
+        k_pages = k_pages.at[page, offset].set(k[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[page, offset].set(v[:, 0].astype(v_pages.dtype))
+    else:
+        rows = jnp.arange(b)
+
+        def scatter_row(new):                      # new: [B, KV, hd]
+            def upd(pages_f):                      # [B, bs, KV, hd] f32
+                return pages_f.at[rows, offset].set(new.astype(jnp.float32))
+            return upd
+
+        k_codes, k_sc = requantize_page_update(
+            k_pages[page], k_scales[page], scatter_row(k[:, 0])
+        )
+        v_codes, v_sc = requantize_page_update(
+            v_pages[page], v_scales[page], scatter_row(v[:, 0])
+        )
+        k_pages = k_pages.at[page].set(k_codes)
+        v_pages = v_pages.at[page].set(v_codes)
+        k_scales = k_scales.at[page].set(k_sc)
+        v_scales = v_scales.at[page].set(v_sc)
     capacity = block_table.shape[1] * bs
     win = jnp.asarray(capacity if window is None else window, jnp.int32)
 
@@ -341,11 +372,15 @@ def attention_decode_paged(
         return paged_attention(
             q[:, 0], k_pages, v_pages, block_table, positions + 1, win,
             impl=impl, plan=plan, perm=perm, block_start=block_start,
+            k_scales=k_scales, v_scales=v_scales,
         )                                                    # [B, H, hd] f32
 
     out = _select_bucket_plan(call, bucket_plans, bucket_perms, plan_class)
     out = out.reshape(b, 1, n_heads * head_dim).astype(x.dtype)
-    return pim_linear(out, params["wo"]), k_pages, v_pages
+    out = pim_linear(out, params["wo"])
+    if k_scales is None:
+        return out, k_pages, v_pages
+    return out, k_pages, v_pages, k_scales, v_scales
 
 
 def attention_prefill_paged(
@@ -367,7 +402,9 @@ def attention_prefill_paged(
     bucket_plans=None,
     bucket_perms=None,
     plan_class=None,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    k_scales: Optional[jnp.ndarray] = None,  # [n_blocks, KV] f32 (int8 pools)
+    v_scales: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, ...]:
     """Suffix prefill against a block-paged cache (DESIGN.md §9).
 
     Suffix token t sits at logical position `start + t`: RoPE rotates at
@@ -386,6 +423,17 @@ def attention_prefill_paged(
     block, and `bucket_plans`/`bucket_perms`/`plan_class` select the
     layer group's bucket-plan variant — the scatter always targets the
     full table, only the read walk is bucket-bounded.
+
+    Quantized pools (DESIGN.md §16): the suffix scatters through an
+    opaque read-modify-write requantization of the slot's table row
+    (`kernels.paged_common.requantize_page_update`; RL206 keeps the
+    dequant itself inside the kernel scaffold). Pad rows route to a
+    dummy gather row so a ragged final page's scale is set by VALID
+    tokens only, and untouched columns (cached-prefix pages, possibly
+    refcounted > 1, plus trailing scratch) write back to scratch page 0
+    so shared pages are never written in place. Returns the 5-tuple
+    `(out, k_pages, v_pages, k_scales, v_scales)`; with `k_scales=None`
+    the float path is byte-for-byte the PR 8 code.
     """
     b, t, _ = x.shape
     bs = k_pages.shape[1]
@@ -402,8 +450,38 @@ def attention_prefill_paged(
     # clamp into the slot's (valid) last page
     page = jnp.where(block_idx < mb, page, 0)
     offset = positions % bs
-    k_pages = k_pages.at[page, offset].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[page, offset].set(v.astype(v_pages.dtype))
+    if k_scales is None:
+        k_pages = k_pages.at[page, offset].set(k.astype(k_pages.dtype))
+        v_pages = v_pages.at[page, offset].set(v.astype(v_pages.dtype))
+    else:
+        valid = (positions < total[:, None]) & (block_idx < mb)  # [B, T]
+        row = jnp.where(valid, block_idx, mb)          # pads → dummy row
+        col = jnp.arange(mb, dtype=jnp.int32)[None, :]           # [1, mb]
+        touched = (col >= start[:, None] // bs) & (col * bs < total[:, None])
+        write_pages = jnp.where(touched, block_table, 0)
+        rows = jnp.arange(b)[:, None]
+
+        def scatter_suffix(new):                   # new: [B, T, KV, hd]
+            def upd(pages_f):                      # [B, mb, bs, KV, hd] f32
+                padded = jnp.concatenate(
+                    [pages_f, jnp.zeros_like(pages_f[:, :1])], axis=1
+                )
+                padded = padded.at[rows, row, offset].set(
+                    new.astype(jnp.float32)
+                )
+                return padded[:, :mb]
+            return upd
+
+        k_codes, k_sc = requantize_page_update(
+            k_pages[block_table], k_scales[block_table], scatter_suffix(k)
+        )
+        v_codes, v_sc = requantize_page_update(
+            v_pages[block_table], v_scales[block_table], scatter_suffix(v)
+        )
+        k_pages = k_pages.at[write_pages].set(k_codes)
+        v_pages = v_pages.at[write_pages].set(v_codes)
+        k_scales = k_scales.at[write_pages].set(k_sc)
+        v_scales = v_scales.at[write_pages].set(v_sc)
     capacity = mb * bs
     win = jnp.asarray(capacity if window is None else window, jnp.int32)
 
@@ -411,11 +489,15 @@ def attention_prefill_paged(
         return paged_prefill(
             q, k_pages, v_pages, block_table, start, total, win,
             impl=impl, plan=plan, perm=perm, block_start=block_start,
+            k_scales=k_scales, v_scales=v_scales,
         )                                                    # [B, T, H, hd]
 
     out = _select_bucket_plan(call, bucket_plans, bucket_perms, plan_class)
     out = out.reshape(b, t, n_heads * head_dim).astype(x.dtype)
-    return pim_linear(out, params["wo"]), k_pages, v_pages
+    out = pim_linear(out, params["wo"])
+    if k_scales is None:
+        return out, k_pages, v_pages
+    return out, k_pages, v_pages, k_scales, v_scales
 
 
 # ---------------------------------------------------------------------------

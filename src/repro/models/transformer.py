@@ -619,20 +619,35 @@ def layer_group_index(cfg: ModelConfig, capacity: int) -> np.ndarray:
 
 
 def init_paged_pool(
-    cfg: ModelConfig, n_blocks: int, block_size: int
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-layer KV page pools [L, n_blocks, bs, KV, hd] (bf16 like the
-    dense cache). Page-id SPACES are per layer group (DESIGN.md §12):
-    layer l only ever reads pool[l] through its own group's block table,
-    so two groups may hand out the same page index without aliasing —
-    the stacked array is a physical layout, not a shared id space."""
+    cfg: ModelConfig, n_blocks: int, block_size: int, kv_dtype: str = "bf16"
+) -> Tuple[jnp.ndarray, ...]:
+    """Per-layer KV page pools [L, n_blocks, bs, KV, hd]. Page-id SPACES
+    are per layer group (DESIGN.md §12): layer l only ever reads pool[l]
+    through its own group's block table, so two groups may hand out the
+    same page index without aliasing — the stacked array is a physical
+    layout, not a shared id space.
+
+    `kv_dtype` selects the pool storage (DESIGN.md §16): "bf16" keeps
+    the dense-cache compute dtype and returns `(k_pages, v_pages)`;
+    "int8" stores symmetric per-page per-(layer,head) quantized codes
+    and returns `(k_pages, v_pages, k_scales, v_scales)` with the
+    scales [L, n_blocks, KV] f32, initialized to 1.0 (so an untouched
+    all-zero page dequantizes to exact zeros)."""
     if cfg.block_kind != "attn":
         raise ValueError(
             f"paged KV cache requires attention layers, got {cfg.block_kind}"
         )
-    dt = compute_dtype(cfg.dtype)
     shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
-    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+    if kv_dtype == "bf16":
+        dt = compute_dtype(cfg.dtype)
+        return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+    if kv_dtype != "int8":
+        raise ValueError(f"kv_dtype must be 'bf16' or 'int8', got {kv_dtype!r}")
+    sshape = (cfg.n_layers, n_blocks, cfg.n_kv_heads)
+    return (
+        jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+        jnp.ones(sshape, jnp.float32), jnp.ones(sshape, jnp.float32),
+    )
 
 
 def _per_layer_paged_views(cfg, block_table, block_start, bucket_plan,
@@ -684,7 +699,9 @@ def decode_step_paged(
     bucket_plan=None,
     bucket_perm=None,
     block_start=None,          # [L, B] int32 first live block (or [B]/None)
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    k_scales=None,             # [L, n_blocks, KV] f32 (int8 pools only)
+    v_scales=None,
+) -> Tuple[jnp.ndarray, ...]:
     """One decode step against the block-paged cache: per-slot positions
     instead of the dense cache's single global write offset, so every slot
     may sit at a different sequence length. `impl` selects the paged
@@ -696,7 +713,13 @@ def decode_step_paged(
     `bucket_plan`/`bucket_perm` may be a single plan over `positions + 1`
     (every layer, the §11 behavior) or per-group tuples from
     `kernels.ops.bucket_args_grouped` — windowed groups bucketed by live
-    trailing pages; the scanned body selects each layer's variant."""
+    trailing pages; the scanned body selects each layer's variant.
+
+    Quantized pools (DESIGN.md §16): pass the [L, n_blocks, KV] scale
+    stacks and each scanned layer threads its own scale rows through
+    `attention_decode_paged`; the return grows to
+    `(logits, k_pages, v_pages, k_scales, v_scales)`. With
+    `k_scales=None` this is byte-for-byte the PR 8 float path."""
     if cfg.block_kind != "attn":
         raise ValueError("decode_step_paged supports attention stacks only")
     dt = compute_dtype(cfg.dtype)
@@ -706,15 +729,24 @@ def decode_step_paged(
     block_table, block_start, plans, perms, cls = _per_layer_paged_views(
         cfg, block_table, block_start, bucket_plan, bucket_perm, capacity
     )
+    quantized = k_scales is not None
 
     def body(xc, xs):
-        lp, w, c, bt, st, kp, vp = xs
-        h, kp, vp = attention_decode_paged(
+        if quantized:
+            lp, w, c, bt, st, kp, vp, ks, vs = xs
+        else:
+            (lp, w, c, bt, st, kp, vp), ks, vs = xs, None, None
+        res = attention_decode_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), positions,
             kp, vp, bt, window=w, impl=impl, block_start=st,
             bucket_plans=plans, bucket_perms=perms, plan_class=c,
+            k_scales=ks, v_scales=vs,
             **_attn_kwargs(cfg),
         )
+        if quantized:
+            h, kp, vp, ks, vs = res
+        else:
+            h, kp, vp = res
         xc = xc + h
         hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.n_experts:
@@ -724,14 +756,19 @@ def decode_step_paged(
             )
         else:
             h2 = _ffn(lp, hin, cfg)
-        return xc + h2, (kp, vp)
+        return xc + h2, ((kp, vp, ks, vs) if quantized else (kp, vp))
 
-    x, (k_pages, v_pages) = jax.lax.scan(
-        body, x,
-        (params["layers"], windows, cls, block_table, block_start,
-         k_pages, v_pages),
-    )
+    xs = (params["layers"], windows, cls, block_table, block_start,
+          k_pages, v_pages)
+    if quantized:
+        x, (k_pages, v_pages, k_scales, v_scales) = jax.lax.scan(
+            body, x, xs + (k_scales, v_scales)
+        )
+    else:
+        x, (k_pages, v_pages) = jax.lax.scan(body, x, xs)
     logits = _head(params, x, cfg)
+    if quantized:
+        return logits, k_pages, v_pages, k_scales, v_scales
     return logits, k_pages, v_pages
 
 
@@ -750,7 +787,9 @@ def prefill_paged(
     bucket_plan=None,
     bucket_perm=None,
     block_start=None,          # [L, B] int32 first live block (or [B]/None)
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    k_scales=None,             # [L, n_blocks, KV] f32 (int8 pools only)
+    v_scales=None,
+) -> Tuple[jnp.ndarray, ...]:
     """Prefill only the uncached suffix directly into the paged pools
     (DESIGN.md §9): the suffix KV scatters through the block table
     in-graph — no dense cache allocation, no host round trip — and each
@@ -764,6 +803,10 @@ def prefill_paged(
     Layer-major (DESIGN.md §12): per-layer tables/starts as in
     `decode_step_paged`; `bucket_plan`/`bucket_perm` accept a single plan
     over the per-slot totals or per-group tuples.
+
+    Quantized pools (DESIGN.md §16): as in `decode_step_paged` — scale
+    stacks ride the scan and the return grows to
+    `(logits, k_pages, v_pages, k_scales, v_scales)`.
     """
     if cfg.block_kind != "attn":
         raise ValueError("prefill_paged supports attention stacks only")
@@ -774,15 +817,24 @@ def prefill_paged(
     block_table, block_start, plans, perms, cls = _per_layer_paged_views(
         cfg, block_table, block_start, bucket_plan, bucket_perm, capacity
     )
+    quantized = k_scales is not None
 
     def body(xc, xs):
-        lp, w, c, bt, st, kp, vp = xs
-        h, kp, vp = attention_prefill_paged(
+        if quantized:
+            lp, w, c, bt, st, kp, vp, ks, vs = xs
+        else:
+            (lp, w, c, bt, st, kp, vp), ks, vs = xs, None, None
+        res = attention_prefill_paged(
             lp["attn"], rmsnorm(lp["ln1"], xc, cfg.norm_eps), start, total,
             kp, vp, bt, window=w, impl=impl, block_start=st,
             bucket_plans=plans, bucket_perms=perms, plan_class=c,
+            k_scales=ks, v_scales=vs,
             **_attn_kwargs(cfg),
         )
+        if quantized:
+            h, kp, vp, ks, vs = res
+        else:
+            h, kp, vp = res
         xc = xc + h
         hin = rmsnorm(lp["ln2"], xc, cfg.norm_eps)
         if cfg.n_experts:
@@ -792,13 +844,16 @@ def prefill_paged(
             )
         else:
             h2 = _ffn(lp, hin, cfg)
-        return xc + h2, (kp, vp)
+        return xc + h2, ((kp, vp, ks, vs) if quantized else (kp, vp))
 
-    x, (k_pages, v_pages) = jax.lax.scan(
-        body, x,
-        (params["layers"], windows, cls, block_table, block_start,
-         k_pages, v_pages),
-    )
+    xs = (params["layers"], windows, cls, block_table, block_start,
+          k_pages, v_pages)
+    if quantized:
+        x, (k_pages, v_pages, k_scales, v_scales) = jax.lax.scan(
+            body, x, xs + (k_scales, v_scales)
+        )
+    else:
+        x, (k_pages, v_pages) = jax.lax.scan(body, x, xs)
     if last_pos is None:
         xe = x[:, -1:]
     else:
@@ -806,6 +861,8 @@ def prefill_paged(
             x, jnp.asarray(last_pos, jnp.int32), 1, axis=1
         )
     logits = _head(params, xe, cfg)
+    if quantized:
+        return logits, k_pages, v_pages, k_scales, v_scales
     return logits, k_pages, v_pages
 
 

@@ -79,6 +79,20 @@ HEADLINE_SPECS: Tuple[Tuple[str, str, str, str, float, float], ...] = (
      "windowed.streamed_fraction", "high_bad", 0.0, 0.01),
     ("kernel.model_error_max", "paged_kernel_bench.json",
      "bucketed.model_error_max", "high_bad", 0.0, 0.01),
+    # quantized int8 KV pages (DESIGN.md §16) — per-page byte ratio vs
+    # bf16 (plan-derived, so the bench asserts <= 0.55 and the gate
+    # holds it near the pin), the pinned int8 tolerance vs the fp
+    # oracle, and the serve-trace drain's structural byte ratio
+    ("paged.kv.resident_bytes_ratio", "paged_kernel_bench.json",
+     "quantized.resident_bytes_ratio", "high_bad", 0.0, 0.01),
+    ("paged.kv.int8_max_abs_error", "paged_kernel_bench.json",
+     "quantized.max_abs_err_vs_fp_oracle", "high_bad", 0.0, 0.03),
+    ("kernel.windowed.int8_bytes_ratio", "paged_kernel_bench.json",
+     "windowed.int8_streamed_bytes_ratio", "high_bad", 0.0, 0.01),
+    ("serve.paged_int8.streamed_bytes_ratio", "serve_bench.json",
+     "paged_int8.streamed_bytes_ratio", "high_bad", 0.0, 0.01),
+    ("serve.paged_int8.model_error_max", "serve_bench.json",
+     "paged_int8.perf.model_error_max", "high_bad", 0.0, 0.01),
     # prefix sharing — dedup structure and token parity
     ("prefix.tokens_bit_exact", "prefix_bench.json",
      "tokens_bit_exact", "exact", 0.0, 0.0),

@@ -286,6 +286,12 @@ class ServeTelemetry:
                 r.gauge("pool_pages_retired", lab).set(
                     g["pages_retired"]
                 )
+                if "resident_page_bytes" in g:
+                    # pinned KV at the pool's TRUE itemsize (int8 pools
+                    # report ~half the bf16 bytes — DESIGN.md §16)
+                    r.gauge("pool_resident_page_bytes", lab).set(
+                        g["resident_page_bytes"]
+                    )
         if dedup is not None:
             r.gauge("pool_resident_bytes").set(dedup["resident_bytes"])
             r.gauge("pool_deduped_bytes").set(dedup["deduped_bytes"])

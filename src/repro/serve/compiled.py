@@ -153,11 +153,41 @@ def _finish(kind: str, jitted, scope: str, annotate: bool, watcher):
 
 
 def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto",
-                      annotate: bool = False, watcher=None):
+                      annotate: bool = False, watcher=None,
+                      kv_dtype: str = "bf16"):
     """(params, toks, k_pages, v_pages, block_tables, block_starts,
     start, total, last_pos[, perms], plans=...) ->
     (logits, k_pages, v_pages). Retraces once per (padded suffix-length
-    bucket, plan combination) pair."""
+    bucket, plan combination) pair.
+
+    `kv_dtype="int8"` (DESIGN.md §16) builds the quantized-pool variant
+    instead: the scale stacks ride as two extra positional args after
+    the pools — (params, toks, k_pages, v_pages, k_scales, v_scales,
+    bt, st, start, total, last_pos[, perms], plans=...) -> (logits,
+    k_pages, v_pages, k_scales, v_scales). The bf16 factory output is
+    untouched (same fn, same call signature, same jit cache keys), so
+    the float path's recompile accounting stays exactly PR 8."""
+
+    if kv_dtype == "int8":
+        def qfn(p, toks, kp, vp, ks, vs, bt, st, strt, tot, lp,
+                perms=None, plans=None):
+            _note_trace("prefill", plans)
+            if annotate:
+                with jax.named_scope("serve/paged_prefill"):
+                    return prefill_paged(
+                        p, toks, kp, vp, bt, strt, tot, cfg, last_pos=lp,
+                        impl=impl, bucket_plan=plans, bucket_perm=perms,
+                        block_start=st, k_scales=ks, v_scales=vs,
+                    )
+            return prefill_paged(
+                p, toks, kp, vp, bt, strt, tot, cfg, last_pos=lp,
+                impl=impl, bucket_plan=plans, bucket_perm=perms,
+                block_start=st, k_scales=ks, v_scales=vs,
+            )
+
+        jitted = jax.jit(qfn, static_argnames=("plans",))
+        return _finish("prefill", jitted, "serve/paged_prefill", annotate,
+                       watcher)
 
     def fn(p, toks, kp, vp, bt, st, strt, tot, lp, perms=None, plans=None):
         _note_trace("prefill", plans)
@@ -179,10 +209,37 @@ def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto",
 
 
 def jit_paged_decode(cfg: ModelConfig, impl: str = "auto",
-                     annotate: bool = False, watcher=None):
+                     annotate: bool = False, watcher=None,
+                     kv_dtype: str = "bf16"):
     """(params, token, k_pages, v_pages, block_tables, block_starts,
     positions[, perms], plans=...) -> (logits, k_pages, v_pages).
-    Retraces once per plan combination."""
+    Retraces once per plan combination.
+
+    `kv_dtype="int8"` (DESIGN.md §16): quantized variant with the scale
+    stacks after the pools — (params, token, k_pages, v_pages,
+    k_scales, v_scales, bt, st, positions[, perms], plans=...) ->
+    (logits, k_pages, v_pages, k_scales, v_scales); the bf16 factory
+    output is byte-for-byte PR 8."""
+
+    if kv_dtype == "int8":
+        def qfn(p, t, kp, vp, ks, vs, bt, st, pos, perms=None, plans=None):
+            _note_trace("decode", plans)
+            if annotate:
+                with jax.named_scope("serve/paged_decode"):
+                    return decode_step_paged(
+                        p, t, kp, vp, bt, pos, cfg, impl=impl,
+                        bucket_plan=plans, bucket_perm=perms,
+                        block_start=st, k_scales=ks, v_scales=vs,
+                    )
+            return decode_step_paged(
+                p, t, kp, vp, bt, pos, cfg, impl=impl,
+                bucket_plan=plans, bucket_perm=perms, block_start=st,
+                k_scales=ks, v_scales=vs,
+            )
+
+        jitted = jax.jit(qfn, static_argnames=("plans",))
+        return _finish("decode", jitted, "serve/paged_decode", annotate,
+                       watcher)
 
     def fn(p, t, kp, vp, bt, st, pos, perms=None, plans=None):
         _note_trace("decode", plans)

@@ -62,6 +62,9 @@ class ServeConfig:
     #: every paged launch at its bucket's page occupancy; "none" keeps
     #: the single full-depth launch
     bucket_strategy: str = "pow2"
+    #: KV page-pool storage (DESIGN.md §16): "bf16" keeps the compute
+    #: dtype; "int8" stores per-page-scaled quantized pages (paged only)
+    kv_dtype: str = "bf16"
 
 
 class ServeEngine:
@@ -89,12 +92,14 @@ class ServeEngine:
         )
         self._decode_paged = jit_paged_decode(
             cfg, impl=serve_cfg.kernel_impl, annotate=annotate,
-            watcher=watcher,
+            watcher=watcher, kv_dtype=serve_cfg.kv_dtype,
         )
         self._prefill_paged = jit_paged_prefill(
             cfg, impl=serve_cfg.kernel_impl, annotate=annotate,
-            watcher=watcher,
+            watcher=watcher, kv_dtype=serve_cfg.kv_dtype,
         )
+        if serve_cfg.kv_dtype != "bf16" and not serve_cfg.paged:
+            raise ValueError("kv_dtype='int8' requires paged=True")
         resolve_bucket_strategy(serve_cfg.bucket_strategy)
 
     def _trace_admit(self, b: int, prompt_tokens: int) -> list:
@@ -188,7 +193,7 @@ class ServeEngine:
         uids = self._trace_admit(b, t) if tel is not None else None
         pc = PagedKVCache(
             self.cfg, n_slots=b, max_len=self.sc.max_cache_len,
-            block_size=bs,
+            block_size=bs, kv_dtype=self.sc.kv_dtype,
         )
         for i in range(b):
             pc.alloc_slot(i, t)
@@ -202,12 +207,22 @@ class ServeEngine:
                 strategy=self.sc.bucket_strategy,
                 kernel_impl=self.sc.kernel_impl,
             )
-        logits, pc.k_pages, pc.v_pages = self._prefill_paged(
-            self.params, toks, pc.k_pages, pc.v_pages,
-            pc.device_block_tables(), pc.device_block_starts(),
-            zeros, zeros + t,
-            jnp.asarray(t - 1, jnp.int32), perms, plans=plans,
-        )
+        if pc.quantized:
+            (logits, pc.k_pages, pc.v_pages,
+             pc.k_scales, pc.v_scales) = self._prefill_paged(
+                self.params, toks, pc.k_pages, pc.v_pages,
+                pc.k_scales, pc.v_scales,
+                pc.device_block_tables(), pc.device_block_starts(),
+                zeros, zeros + t,
+                jnp.asarray(t - 1, jnp.int32), perms, plans=plans,
+            )
+        else:
+            logits, pc.k_pages, pc.v_pages = self._prefill_paged(
+                self.params, toks, pc.k_pages, pc.v_pages,
+                pc.device_block_tables(), pc.device_block_starts(),
+                zeros, zeros + t,
+                jnp.asarray(t - 1, jnp.int32), perms, plans=plans,
+            )
         pc.lengths[:] = t
         out = []
         done = np.zeros((b,), bool)
@@ -240,11 +255,20 @@ class ServeEngine:
                     strategy=self.sc.bucket_strategy,
                     kernel_impl=self.sc.kernel_impl,
                 )
-            logits, pc.k_pages, pc.v_pages = self._decode_paged(
-                self.params, tok, pc.k_pages, pc.v_pages,
-                pc.device_block_tables(), pc.device_block_starts(),
-                pc.device_positions(), perms, plans=plans,
-            )
+            if pc.quantized:
+                (logits, pc.k_pages, pc.v_pages,
+                 pc.k_scales, pc.v_scales) = self._decode_paged(
+                    self.params, tok, pc.k_pages, pc.v_pages,
+                    pc.k_scales, pc.v_scales,
+                    pc.device_block_tables(), pc.device_block_starts(),
+                    pc.device_positions(), perms, plans=plans,
+                )
+            else:
+                logits, pc.k_pages, pc.v_pages = self._decode_paged(
+                    self.params, tok, pc.k_pages, pc.v_pages,
+                    pc.device_block_tables(), pc.device_block_starts(),
+                    pc.device_positions(), perms, plans=plans,
+                )
             for i in range(b):
                 if not done[i]:
                     pc.lengths[i] += 1

@@ -256,6 +256,14 @@ class LayerPagePool:
         cache.v_pages = cache.v_pages.at[lg, new].set(
             cache.v_pages[lg, old]
         )
+        if getattr(cache, "quantized", False):
+            # a quantized page is (codes, scale) — COW moves both
+            cache.k_scales = cache.k_scales.at[lg, new].set(
+                cache.k_scales[lg, old]
+            )
+            cache.v_scales = cache.v_scales.at[lg, new].set(
+                cache.v_scales[lg, old]
+            )
         self._ref[old] -= 1
         self._owned[slot][block_idx] = new
         self.block_table[slot, block_idx] = new
@@ -307,6 +315,7 @@ class PagedKVCache:
         block_size: int = 16,
         n_blocks: int = 0,
         window_retirement: bool = True,
+        kv_dtype: str = "bf16",
     ):
         """`max_len`: max tokens (prompt + generated) any slot may hold.
         `n_blocks=0` sizes each group's pool for full occupancy: scratch
@@ -315,7 +324,12 @@ class PagedKVCache:
         retirement and window-aware attach skipping — the
         lockstep-residency baseline the benchmarks compare against
         (tokens are bit-identical either way: retired columns are
-        window-masked)."""
+        window-masked). `kv_dtype` ("bf16" | "int8", DESIGN.md §16)
+        selects the pool storage; "int8" adds per-page per-(layer,head)
+        f32 scale stacks (`k_scales`/`v_scales`, [L, n_blocks, KV])
+        managed alongside the pools — COW copies a page's scale rows
+        with its KV rows, and the host suffix writer quantizes on
+        append through `kernels.paged_common.requantize_page_update`."""
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if max_len < 1:
@@ -341,10 +355,26 @@ class PagedKVCache:
                 layer_attn_groups(cfg, capacity)
             )
         ]
-        self.k_pages, self.v_pages = init_paged_pool(
-            cfg, self.n_blocks, block_size
-        )
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'bf16' or 'int8', got {kv_dtype!r}"
+            )
+        self.kv_dtype = kv_dtype
+        if kv_dtype == "int8":
+            (self.k_pages, self.v_pages,
+             self.k_scales, self.v_scales) = init_paged_pool(
+                cfg, self.n_blocks, block_size, kv_dtype
+            )
+        else:
+            self.k_pages, self.v_pages = init_paged_pool(
+                cfg, self.n_blocks, block_size
+            )
+            self.k_scales = self.v_scales = None
         self.lengths = np.zeros((n_slots,), np.int32)
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scales is not None
 
     # -- group-0 conveniences (single-group configs == the old API) --------
 
@@ -625,6 +655,12 @@ class PagedKVCache:
         k/v: [L, S, KV, hd] with the first `n_tokens` rows valid; each
         layer group scatters its own layer rows through its own table.
         Sets the slot length to `start + n_tokens`.
+
+        Quantized pools (DESIGN.md §16): the touched pages requantize
+        through `kernels.paged_common.requantize_page_update` — existing
+        head rows of a partially filled first page survive the
+        round-trip in the float domain, and the per-page scales update
+        in the same step (this layer never dequantizes itself, RL206).
         """
         bs = self.block_size
         self.begin_append(slot, start, n_tokens)
@@ -644,6 +680,36 @@ class PagedKVCache:
             nl = len(p.layers)
             k_g = k[np.array(p.layers)]
             v_g = v[np.array(p.layers)]
+
+            if self.quantized:
+                from ..kernels.paged_common import requantize_page_update
+
+                def rewrite(src):            # src: [nl, S, KV, hd]
+                    def upd(pages_f):        # [nl, n_pages, bs, KV, hd]
+                        flat = pages_f.reshape(nl, n_pages * bs, kvh, hd)
+                        new = jnp.concatenate(
+                            [flat[:, :lead],
+                             src[:, :n_tokens].astype(jnp.float32)],
+                            axis=1,
+                        )
+                        new = jnp.pad(
+                            new, ((0, 0), (0, pad), (0, 0), (0, 0))
+                        )
+                        return new.reshape(nl, n_pages, bs, kvh, hd)
+                    return upd
+
+                idx = (lg[:, None], pages_j[None, :])
+                k_codes, k_sc = requantize_page_update(
+                    self.k_pages[idx], self.k_scales[idx], rewrite(k_g)
+                )
+                v_codes, v_sc = requantize_page_update(
+                    self.v_pages[idx], self.v_scales[idx], rewrite(v_g)
+                )
+                self.k_pages = self.k_pages.at[idx].set(k_codes)
+                self.v_pages = self.v_pages.at[idx].set(v_codes)
+                self.k_scales = self.k_scales.at[idx].set(k_sc)
+                self.v_scales = self.v_scales.at[idx].set(v_sc)
+                continue
 
             def scatter(pool, src, cur):
                 head = cur[:, :lead] if lead else src[:, :0]
@@ -725,7 +791,10 @@ class PagedKVCache:
     def pool_gauges(self) -> List[Dict[str, object]]:
         """Per-group gauge sample for the telemetry layer (DESIGN.md
         §13): one dict per pool, keys matching the `pool_*{group=g}`
-        metric family."""
+        metric family. `resident_page_bytes` reports the group's pinned
+        KV at the pool's TRUE itemsize (scale rows included), so an
+        int8 run shows the ~2× drop live in `--metrics` output."""
+        plb = self.page_layer_bytes
         return [
             {
                 "gid": p.gid,
@@ -736,6 +805,8 @@ class PagedKVCache:
                 "cow_events": p.cow_events,
                 "pages_retired": p.pages_retired,
                 "pages_allocated_total": p.pages_allocated,
+                "resident_page_bytes":
+                    len(p.layers) * p.allocated_pages() * plb,
             }
             for p in self.pools
         ]
@@ -765,10 +836,19 @@ class PagedKVCache:
 
     @property
     def page_layer_bytes(self) -> int:
-        """Bytes of ONE page in ONE layer (K + V)."""
+        """Bytes of ONE page in ONE layer (K + V), at the pool's ACTUAL
+        itemsize — never a hardcoded fp16 assumption. A quantized page
+        is (codes, scale row), so int8 pools add the two f32 scale rows
+        the kernels stream beside each page; both `obs/perf` roofline
+        predictions and `obs/tracing` measured launch accounting derive
+        from this one number, which is what keeps the §14
+        predicted-vs-measured gate at exactly zero on BOTH dtypes."""
         _, _, bs, kvh, hd = self.k_pages.shape
         itemsize = jnp.dtype(self.k_pages.dtype).itemsize
-        return 2 * bs * kvh * hd * itemsize
+        data = 2 * bs * kvh * hd * itemsize
+        if self.quantized:
+            data += 2 * kvh * jnp.dtype(self.k_scales.dtype).itemsize
+        return data
 
     def resident_page_bytes(self) -> int:
         """Bytes of KV actually pinned right now: each group's allocated

@@ -127,6 +127,7 @@ class ContinuousBatcher:
         bucket_strategy: str = "pow2",
         prefix_max_retained_fraction: float = 1.0,
         window_retirement: bool = True,
+        kv_dtype: str = "bf16",
         telemetry: Optional[ServeTelemetry] = None,
     ):
         self.cfg = cfg
@@ -164,6 +165,11 @@ class ContinuousBatcher:
         self.prefill_tokens = 0
         if prefix and not paged:
             raise ValueError("prefix sharing requires paged=True")
+        if kv_dtype != "bf16" and not paged:
+            raise ValueError("kv_dtype='int8' requires paged=True")
+        #: KV pool storage dtype (DESIGN.md §16): "int8" threads the
+        #: per-page scale stacks through every compiled step below
+        self.kv_dtype = kv_dtype
         self.prefix = (
             PrefixIndex(
                 block_size,
@@ -179,16 +185,19 @@ class ContinuousBatcher:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
                 n_blocks=n_blocks, window_retirement=window_retirement,
+                kv_dtype=kv_dtype,
             )
             self.cache = None
             self._decode_paged = jit_paged_decode(
-                cfg, impl=kernel_impl, annotate=annotate, watcher=watcher
+                cfg, impl=kernel_impl, annotate=annotate, watcher=watcher,
+                kv_dtype=kv_dtype,
             )
             # suffixes are right-padded to a block-size multiple, so this
             # retraces once per bucket and `last_pos` selects the true
             # suffix end dynamically
             self._prefill_paged = jit_paged_prefill(
-                cfg, impl=kernel_impl, annotate=annotate, watcher=watcher
+                cfg, impl=kernel_impl, annotate=annotate, watcher=watcher,
+                kv_dtype=kv_dtype,
             )
         else:
             self.pcache = None
@@ -341,11 +350,21 @@ class ContinuousBatcher:
             bt, st = bt[i: i + 1], st[i: i + 1]
         else:                            # layer-major: [L, B, mb] / [L, B]
             bt, st = bt[:, i: i + 1], st[:, i: i + 1]
-        logits, pc.k_pages, pc.v_pages = self._prefill_paged(
-            self.params, toks, pc.k_pages, pc.v_pages, bt, st,
-            jnp.asarray([n_cached], jnp.int32), jnp.asarray([t], jnp.int32),
-            jnp.asarray(ns - 1, jnp.int32), perms, plans=plans,
-        )
+        if pc.quantized:
+            (logits, pc.k_pages, pc.v_pages,
+             pc.k_scales, pc.v_scales) = self._prefill_paged(
+                self.params, toks, pc.k_pages, pc.v_pages,
+                pc.k_scales, pc.v_scales, bt, st,
+                jnp.asarray([n_cached], jnp.int32),
+                jnp.asarray([t], jnp.int32),
+                jnp.asarray(ns - 1, jnp.int32), perms, plans=plans,
+            )
+        else:
+            logits, pc.k_pages, pc.v_pages = self._prefill_paged(
+                self.params, toks, pc.k_pages, pc.v_pages, bt, st,
+                jnp.asarray([n_cached], jnp.int32), jnp.asarray([t], jnp.int32),
+                jnp.asarray(ns - 1, jnp.int32), perms, plans=plans,
+            )
         pc.lengths[i] = t
         self.prefill_tokens += pad
         if self.telemetry is not None:
@@ -476,11 +495,20 @@ class ContinuousBatcher:
                 strategy=self.bucket_strategy,
                 kernel_impl=self._kernel_impl,
             )
-        logits, pc.k_pages, pc.v_pages = self._decode_paged(
-            self.params, self.tokens, pc.k_pages, pc.v_pages,
-            pc.device_block_tables(), pc.device_block_starts(),
-            pc.device_positions(), perms, plans=plans,
-        )
+        if pc.quantized:
+            (logits, pc.k_pages, pc.v_pages,
+             pc.k_scales, pc.v_scales) = self._decode_paged(
+                self.params, self.tokens, pc.k_pages, pc.v_pages,
+                pc.k_scales, pc.v_scales,
+                pc.device_block_tables(), pc.device_block_starts(),
+                pc.device_positions(), perms, plans=plans,
+            )
+        else:
+            logits, pc.k_pages, pc.v_pages = self._decode_paged(
+                self.params, self.tokens, pc.k_pages, pc.v_pages,
+                pc.device_block_tables(), pc.device_block_starts(),
+                pc.device_positions(), perms, plans=plans,
+            )
         for i in active:
             pc.lengths[i] += 1
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)

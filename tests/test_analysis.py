@@ -230,6 +230,70 @@ def test_kc102_operand_arity_mismatch(tmp_path):
     assert "passes 2 operands" in found[0].message
 
 
+def test_kc102_vararg_kernel_accepts_dual_layout(tmp_path):
+    # a `*refs` kernel (the §16 quantized/fp dual-layout bodies) is in
+    # contract as long as its NAMED positionals fit the implied count
+    found = _kernel_fixture(tmp_path, """
+        import functools
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _kernel(bt_ref, st_ref, *refs):
+            pass
+
+        def run(bt, st, q, kp):
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(4,),
+                in_specs=[
+                    pl.BlockSpec((1, 4), lambda i, *_: (i, 0)),
+                    pl.BlockSpec((1, 4), lambda i, *_: (i, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, 4), lambda i, *_: (i, 0)),
+                scratch_shapes=[],
+            )
+            kernel = functools.partial(_kernel)
+            return pl.pallas_call(
+                kernel, grid_spec=grid_spec,
+                out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+            )(bt, st, q, kp)
+        """)
+    assert found == []
+
+
+def test_kc102_vararg_kernel_named_overshoot(tmp_path):
+    # ...but naming MORE positionals than the grid spec can supply
+    # still shifts every ref out of slot, vararg or not
+    found = _kernel_fixture(tmp_path, """
+        import functools
+        import jax
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _kernel(a, b, c, d, e, *refs):
+            pass
+
+        def run(bt, q):
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(4,),
+                in_specs=[
+                    pl.BlockSpec((1, 4), lambda i, *_: (i, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, 4), lambda i, *_: (i, 0)),
+                scratch_shapes=[],
+            )
+            kernel = functools.partial(_kernel)
+            return pl.pallas_call(
+                kernel, grid_spec=grid_spec,
+                out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+            )(bt, q)
+        """)
+    assert rules(found) == {"KC102"}
+    assert "names 5 positional refs" in found[0].message
+
+
 def test_kc106_any_operands_without_dma_semaphore(tmp_path):
     found = _kernel_fixture(tmp_path, """
         import functools
@@ -403,6 +467,42 @@ def test_rl205_uncovered_mutator(tmp_path):
             pool.grow(0, 0, 4)
             pool.check_invariants([4], None)
         """))
+    assert check_repo_conventions(root) == []
+
+
+def test_rl206_dequant_outside_kernels(tmp_path):
+    # dequantization escaping the kernels' page fold (§16): both the
+    # import and the use are findings — the serve/models layers only
+    # get the opaque `requantize_page_update` append primitive
+    root = _mini_repo(tmp_path, {
+        "serve/cache.py": """
+            from repro.kernels.paged_common import dequantize_pages
+
+            def peek(codes, scales):
+                return dequantize_pages(codes, scales)
+            """,
+    })
+    found = check_repo_conventions(root)
+    assert rules(found) == {"RL206"}
+    assert all("dequantize_pages" in f.message for f in found)
+
+
+def test_rl206_allows_kernels_and_requantize(tmp_path):
+    root = _mini_repo(tmp_path, {
+        "kernels/paged_common.py": """
+            def dequantize_pages(codes, scales):
+                return codes * scales
+
+            def load_kv_page(k_buf, v_buf, cur):
+                return k_buf[cur], v_buf[cur]
+            """,
+        "models/attention.py": """
+            from repro.kernels.paged_common import requantize_page_update
+
+            def append(codes, scales, fn):
+                return requantize_page_update(codes, scales, fn)
+            """,
+    })
     assert check_repo_conventions(root) == []
 
 
