@@ -332,6 +332,7 @@ def paged_attention_bench() -> List[Row]:
     # kernel shape.
     from repro.configs.gemma3_27b import config as gemma3_config
     from repro.models import layer_attn_groups
+    from repro.serve.paged_cache import LayerPagePool
 
     gcfg = gemma3_config()
     wbs, wmb = 64, 64                       # 4096-token table
@@ -346,10 +347,13 @@ def paged_attention_bench() -> List[Row]:
     streamed_grouped = 0
     per_group = {}
     for window, layers in groups:
-        if window is None:
-            first = np.zeros_like(wlens)
-        else:
-            first = np.maximum(0, (wlens - 1 - window + 1) // wbs)
+        # derive the retired head from the SAME bookkeeping the serving
+        # pools use (q_min = length - 1 is the newest query position) so
+        # per-group sizing can't silently skew the byte denominators
+        gpool = LayerPagePool(0, layers, window, n_slots=1, mb=wmb,
+                              n_blocks=2, block_size=wbs, retire=True)
+        first = np.asarray([gpool.first_live_block(int(n) - 1)
+                            for n in wlens])
         live = np.maximum(length_needs - first, 1)
         gplan, _ = ops.make_bucket_plan(None, wbs, wmb, needs=live)
         g_pages = ops.plan_streamed_pages(gplan, nslots, wmb)
@@ -385,7 +389,10 @@ def paged_attention_bench() -> List[Row]:
     # full-depth single launch on every valid row
     sW = 2 * bbs                             # small window: 2 live blocks
     slens = np.minimum(rng.geometric(0.05, size=bB) + sW, bmb * bbs)
-    sfirst = np.maximum(0, (slens - 1 - sW + 1) // bbs)
+    spool = LayerPagePool(0, (0,), sW, n_slots=1, mb=bmb, n_blocks=2,
+                          block_size=bbs, retire=True)
+    sfirst = np.asarray([spool.first_live_block(int(n) - 1)
+                         for n in slens])
     sbt = np.asarray(rng.integers(1, bnb, size=(bB, bmb)), np.int32)
     for i in range(bB):
         sbt[i, : sfirst[i]] = 0              # retired head -> scratch

@@ -57,24 +57,31 @@ def _trace(cfg, n_requests: int, max_len: int):
 
 def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
            paged, block_size, prompt_pad=None, telemetry=None,
-           kv_dtype="bf16"):
+           kv_dtype="bf16", track_residency=False, **cb_kwargs):
     from repro.serve import ContinuousBatcher, Request
 
     cb = ContinuousBatcher(
         cfg, params, n_slots=n_slots, cache_len=cache_len,
         prompt_len=prompt_pad, paged=paged, block_size=block_size,
-        telemetry=telemetry, kv_dtype=kv_dtype,
+        telemetry=telemetry, kv_dtype=kv_dtype, **cb_kwargs,
     )
     for uid, p in enumerate(prompts):
         if not paged and prompt_pad is not None:  # pad to the shared length
             p = jnp.pad(p, (prompt_pad - p.shape[0], 0))
         cb.submit(Request(uid=uid, prompt=p, max_new_tokens=new_tokens))
     occupancy: List[float] = []
+    admit_tick = {}  # uid -> tick it left the queue (§17 admission wait)
     on_tick = None
-    if paged and telemetry is None:
-        # metrics-off fallback: the one structural series the headline
-        # report still needs (everything else comes from the telemetry)
-        on_tick = lambda b: occupancy.append(b.pcache.slot_occupancy())
+    if paged and (telemetry is None or track_residency):
+        def on_tick(b):
+            if telemetry is None:
+                # metrics-off fallback: the one structural series the
+                # headline report still needs without the telemetry
+                occupancy.append(b.pcache.slot_occupancy())
+            queued = {r.uid for r in b.queue}
+            for uid in range(len(prompts)):
+                if uid not in admit_tick and uid not in queued:
+                    admit_tick[uid] = b.ticks
     t0 = time.perf_counter()
     results = cb.run_until_drained(on_tick=on_tick)
     dt = time.perf_counter() - t0
@@ -94,6 +101,18 @@ def _drain(cfg, params, prompts, *, n_slots, cache_len, new_tokens,
     if paged and occupancy:
         stats["mean_occupancy"] = round(sum(occupancy) / len(occupancy), 3)
         stats["peak_occupancy"] = round(max(occupancy), 3)
+    if paged and track_residency:
+        # draw-time high-water mark — catches the single-shot prefill's
+        # intra-tick transient that per-tick sampling would miss (§17)
+        stats["peak_resident_page_bytes"] = \
+            cb.pcache.peak_resident_page_bytes()
+        stats["provisioned_page_bytes"] = cb.pcache.provisioned_page_bytes()
+        # ticks each request sat queued before admission (0 = admitted
+        # on its first tick); order matches the submitted uids
+        stats["admission_wait_ticks"] = [
+            admit_tick.get(uid, cb.ticks) - 1
+            for uid in range(len(prompts))
+        ]
     if telemetry is not None:
         lat = telemetry.latency_summary()
         stats["latency_s"] = {
@@ -190,12 +209,74 @@ def serve_bench() -> List[Row]:
         "meaningful over an identical schedule"
     )
 
+    # -- long-prompt leg (DESIGN.md §17) ----------------------------------
+    # The gemma3-27b windowed stack with a long prompt at the head of a
+    # short-decode trace — the smoke-scale analog of an 8k prompt
+    # arriving mid-stream. Baseline: uniform pools, single-shot prefill
+    # (the long prompt's windowed groups transiently pin ceil(72/4)=18
+    # pages/slot). Chunked: prefill_chunk + auto per-group sizing caps
+    # the windowed residency at the live bound. Tokens must be
+    # bit-exact, peak resident page-bytes strictly reduced, and the §14
+    # gate holds on the chunked path's per-chunk launch accounting.
+    gcfg = get_config("gemma3-27b", smoke=True)
+    gparams = init_lm(jax.random.PRNGKey(0), gcfg)
+    long_len, short_lens = 72, [6, 5, 7, 6, 4]
+    gkey = jax.random.PRNGKey(43)
+    gprompts = [
+        jax.random.randint(jax.random.fold_in(gkey, u), (t,), 0,
+                           gcfg.vocab_size).astype(jnp.int32)
+        for u, t in enumerate([long_len] + short_lens)
+    ]
+    gkw = dict(n_slots=2, cache_len=long_len + new_tokens + 2,
+               new_tokens=new_tokens, paged=True, block_size=4,
+               track_residency=True)
+    tel_b = ServeTelemetry()
+    base_lp, base_res, _ = _drain(gcfg, gparams, gprompts,
+                                  telemetry=tel_b, **gkw)
+    tel_c = ServeTelemetry()
+    chunk_lp, chunk_res, cb_c = _drain(
+        gcfg, gparams, gprompts, telemetry=tel_c,
+        prefill_chunk=8, group_blocks="auto", **gkw,
+    )
+    assert chunk_res == base_res, (
+        "chunked prefill + per-group sizing changed generated tokens — "
+        "the decomposition must be bit-exact"
+    )
+    perf_lp = tel_c.perf.summary()
+    assert perf_lp["model_error_max"] <= 0.01, (
+        f"perf model error {perf_lp['model_error_max']} exceeds 1% on "
+        f"the chunked long-prompt trace: {perf_lp}"
+    )
+    assert chunk_lp["peak_resident_page_bytes"] < \
+        base_lp["peak_resident_page_bytes"], (base_lp, chunk_lp)
+    assert chunk_lp["provisioned_page_bytes"] < \
+        base_lp["provisioned_page_bytes"], (base_lp, chunk_lp)
+    # recompile count stays bounded by the pow2 chunk plan set: mid
+    # chunks are one fixed suffix width, only the tail is ragged
+    chunk_lp["recompiles"] = tel_c._compile_watcher.total
+    chunk_lp["perf"] = perf_lp
+    long_prompt = {
+        "trace": {"long_len": long_len, "short_lens": short_lens,
+                  "new_tokens": new_tokens, "n_slots": 2,
+                  "arch": "gemma3-27b"},
+        "uniform_single_shot": base_lp,
+        "chunked_auto_sized": chunk_lp,
+        "peak_resident_ratio": round(
+            chunk_lp["peak_resident_page_bytes"]
+            / base_lp["peak_resident_page_bytes"], 4),
+        "provisioned_ratio": round(
+            chunk_lp["provisioned_page_bytes"]
+            / base_lp["provisioned_page_bytes"], 4),
+        "tokens_bit_exact": True,
+    }
+
     report = {
         "trace": {"n_requests": n_requests, "prompt_lens": lens,
                   "new_tokens": new_tokens, "n_slots": n_slots},
         "dense": dense,
         "paged": paged,
         "paged_int8": paged_q,
+        "long_prompt": long_prompt,
         "prefill_padding_waste": round(
             1.0 - paged["prefill_tokens"] / dense["prefill_tokens"], 3
         ),
@@ -254,6 +335,21 @@ def serve_bench() -> List[Row]:
             f"{k}={v}" for k, v in
             sorted(paged["recompiles"]["by_step"].items())
         ),
+    ))
+    ittft = chunk_lp["latency_s"]["ttft_s"]
+    waits = chunk_lp["admission_wait_ticks"]
+    rows.append((
+        "serve/long_prompt", chunk_lp["wall_s"] * 1e6,
+        f"peak_resident_ratio={long_prompt['peak_resident_ratio']};"
+        f"provisioned_ratio={long_prompt['provisioned_ratio']};"
+        f"peak_resident_bytes={chunk_lp['peak_resident_page_bytes']}/"
+        f"{base_lp['peak_resident_page_bytes']};"
+        f"admission_wait_max={max(waits)};"
+        f"interleaved_ttft_p50={ittft['p50']:.4f};"
+        f"interleaved_ttft_p99={ittft['p99']:.4f};"
+        f"recompiles={chunk_lp['recompiles']};"
+        f"model_error_max={perf_lp['model_error_max']:g};"
+        f"tokens_bit_exact=True",
     ))
     return rows
 

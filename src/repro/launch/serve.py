@@ -78,6 +78,27 @@ def main():
                          "'pow2' bounds each kernel launch at its bucket's "
                          "page occupancy, 'none' keeps the single "
                          "full-depth launch")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill (DESIGN.md §17): split each "
+                         "prompt into block-multiple chunks of at most "
+                         "this many tokens, prefilled one chunk per tick "
+                         "interleaved with decode — no head-of-line "
+                         "stall behind a long prompt, and a windowed "
+                         "group transiently holds only window + chunk "
+                         "tokens (0 = single-shot; requires --paged)")
+    ap.add_argument("--group-pool-slack", type=int, default=None,
+                    help="retirement-aware admission slack (§17): a "
+                         "retiring windowed group reserves "
+                         "ceil(window/bs) + slack draws instead of the "
+                         "full ceil(total/bs) (default: derived from "
+                         "--prefill-chunk, the exact worst case)")
+    ap.add_argument("--group-pool", default="uniform",
+                    choices=["uniform", "auto"],
+                    help="per-group pool sizing (§17): 'auto' sizes each "
+                         "retiring windowed group's pool at n_slots * "
+                         "(ceil(window/bs) + slack) — the HBM-budget "
+                         "win on mixed global/window stacks (requires "
+                         "--prefill-chunk > 0)")
     ap.add_argument("--no-window-retirement", action="store_true",
                     help="disable sliding-window page retirement "
                          "(DESIGN.md §12) — the lockstep-residency "
@@ -100,6 +121,14 @@ def main():
     if args.kv_dtype != "bf16" and not args.paged:
         ap.error("--kv-dtype int8 requires --paged (quantized pages "
                  "live in the block-paged pools)")
+    if (args.prefill_chunk or args.group_pool_slack is not None
+            or args.group_pool != "uniform") and not args.paged:
+        ap.error("--prefill-chunk / --group-pool-slack / --group-pool "
+                 "require --paged (they shape the block-paged pools)")
+    if args.group_pool == "auto" and not args.prefill_chunk:
+        ap.error("--group-pool auto requires --prefill-chunk > 0: the "
+                 "live-need bound that sizes each group only holds when "
+                 "prefill appends are chunk-bounded (DESIGN.md §17)")
 
     cfg = get_config(args.arch, smoke=True)
     params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -128,6 +157,9 @@ def main():
         bucket_strategy=args.bucket_strategy,
         window_retirement=not args.no_window_retirement,
         kv_dtype=args.kv_dtype,
+        prefill_chunk=args.prefill_chunk,
+        group_pool_slack=args.group_pool_slack,
+        group_blocks="auto" if args.group_pool == "auto" else None,
         telemetry=telemetry,
     )
     key = jax.random.PRNGKey(1)
@@ -167,9 +199,15 @@ def main():
         if len(pc.pools) > 1:  # layer-major groups (DESIGN.md §12)
             for p in pc.pools:
                 kind = "global" if p.window is None else f"window={p.window}"
-                print(f"  group {p.gid} ({kind}, {len(p.layers)} layers): "
+                bound = ("" if p.live_bound is None
+                         else f", live-bound {p.live_bound} blocks/slot")
+                print(f"  group {p.gid} ({kind}, {len(p.layers)} layers, "
+                      f"pool {p.n_blocks - 1} pages{bound}): "
                       f"{p.pages_allocated} pages drawn, "
                       f"{p.pages_retired} retired, {p.cow_events} COW")
+            print(f"  provisioned page bytes: "
+                  f"{pc.provisioned_page_bytes()} "
+                  f"(per-group sizing, DESIGN.md §17)")
     if args.prefix:
         ix = batcher.prefix
         print(f"  prefix index: {ix.hits}/{ix.lookups} hits, "

@@ -417,6 +417,15 @@ def attention_prefill_paged(
     past the slot's allocated blocks. `impl` follows
     `kernels.ops.resolve_impl` (strict explicit values, silent `auto`).
 
+    Chunked prefill (DESIGN.md §17) is this same suffix path called
+    repeatedly with an advancing `start`: chunk k covers positions
+    [start_k, start_k + T). Because the suffix KV is scattered into the
+    pages BEFORE the attention walk reads them back through the block
+    table, a chunk attends over every previously-written chunk exactly
+    as a single-shot prefill with `total = start_k + T` would — the
+    causal mask makes the two decompositions bit-identical, so no new
+    kernel or mask variant is needed here.
+
     Layer-major extras (DESIGN.md §12): `block_table` is THIS layer's
     table (a windowed layer's retired/skipped head columns are scratch,
     masked by the window term), `block_start` the per-slot first live

@@ -796,6 +796,9 @@ def prefill_paged(
     layer's attention covers the cached prefix pages via the paged-prefill
     kernel's offset causal mask. With start = 0 this is a full paged
     prefill; with a prefix hit the cached pages contribute reads only.
+    Chunked prefill (DESIGN.md §17) is the same call iterated with an
+    advancing `start` — each chunk reads the previous chunks' pages as
+    "cached prefix", so the decomposition is bit-exact vs single-shot.
 
     `last_pos` (dynamic scalar, suffix-relative) selects which suffix
     position's logits to return instead of T-1 — callers right-pad ragged

@@ -93,6 +93,24 @@ HEADLINE_SPECS: Tuple[Tuple[str, str, str, str, float, float], ...] = (
      "paged_int8.streamed_bytes_ratio", "high_bad", 0.0, 0.01),
     ("serve.paged_int8.model_error_max", "serve_bench.json",
      "paged_int8.perf.model_error_max", "high_bad", 0.0, 0.01),
+    # long-context trio (DESIGN.md §17) — chunked prefill + per-group
+    # sizing must keep shrinking the windowed stack's peak resident and
+    # provisioned page bytes (structural ratios, exact at a fixed
+    # trace), stay bit-exact vs single-shot, hold the §14 gate at zero
+    # on per-chunk accounting, and keep the chunk retrace set bounded
+    ("serve.long_prompt.peak_resident_ratio", "serve_bench.json",
+     "long_prompt.peak_resident_ratio", "high_bad", 0.0, 0.01),
+    ("serve.long_prompt.provisioned_ratio", "serve_bench.json",
+     "long_prompt.provisioned_ratio", "high_bad", 0.0, 0.01),
+    ("serve.long_prompt.tokens_bit_exact", "serve_bench.json",
+     "long_prompt.tokens_bit_exact", "exact", 0.0, 0.0),
+    ("serve.long_prompt.model_error_max", "serve_bench.json",
+     "long_prompt.chunked_auto_sized.perf.model_error_max",
+     "high_bad", 0.0, 0.01),
+    ("serve.long_prompt.recompiles", "serve_bench.json",
+     "long_prompt.chunked_auto_sized.recompiles", "exact", 0.0, 0.0),
+    ("serve.long_prompt.ticks", "serve_bench.json",
+     "long_prompt.chunked_auto_sized.ticks", "exact", 0.0, 0.0),
     # prefix sharing — dedup structure and token parity
     ("prefix.tokens_bit_exact", "prefix_bench.json",
      "tokens_bit_exact", "exact", 0.0, 0.0),

@@ -166,7 +166,14 @@ def jit_paged_prefill(cfg: ModelConfig, impl: str = "auto",
     bt, st, start, total, last_pos[, perms], plans=...) -> (logits,
     k_pages, v_pages, k_scales, v_scales). The bf16 factory output is
     untouched (same fn, same call signature, same jit cache keys), so
-    the float path's recompile accounting stays exactly PR 8."""
+    the float path's recompile accounting stays exactly PR 8.
+
+    Chunked prefill (DESIGN.md §17) reuses this factory unchanged: each
+    chunk is one call with an advancing `start`/`total`. Mid chunks are
+    exactly `prefill_chunk` tokens wide (a block multiple) and only the
+    tail chunk is ragged, so the retrace set stays bounded by the §11
+    pow2 plan classes times at most two suffix widths — the scheduler
+    asserts the compile-cache size through `_cache_size()` as before."""
 
     if kv_dtype == "int8":
         def qfn(p, toks, kp, vp, ks, vs, bt, st, strt, tot, lp,

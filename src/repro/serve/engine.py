@@ -65,6 +65,17 @@ class ServeConfig:
     #: KV page-pool storage (DESIGN.md §16): "bf16" keeps the compute
     #: dtype; "int8" stores per-page-scaled quantized pages (paged only)
     kv_dtype: str = "bf16"
+    #: chunked prefill (DESIGN.md §17): > 0 splits the prompt into
+    #: block-multiple chunks of at most this many tokens, prefilled as
+    #: successive launches, so a windowed group's transient allocation
+    #: caps at window + chunk instead of the full prompt. 0 = one shot.
+    prefill_chunk: int = 0
+    #: per-group live-draw slack on top of ceil(window/bs) (§17);
+    #: None derives the exact worst case from prefill_chunk
+    group_pool_slack: Optional[int] = None
+    #: per-group pool sizing (§17): None = uniform, "auto" sizes each
+    #: retiring windowed group at n_slots * live_bound, or {gid: n}
+    group_blocks: Any = None
 
 
 class ServeEngine:
@@ -194,42 +205,63 @@ class ServeEngine:
         pc = PagedKVCache(
             self.cfg, n_slots=b, max_len=self.sc.max_cache_len,
             block_size=bs, kv_dtype=self.sc.kv_dtype,
+            prefill_chunk=self.sc.prefill_chunk,
+            group_pool_slack=self.sc.group_pool_slack,
+            group_blocks=self.sc.group_blocks,
         )
-        for i in range(b):
-            pc.alloc_slot(i, t)
-        pad = -(-t // bs) * bs
-        toks = jnp.pad(prompts, ((0, 0), (0, pad - t)))
+        # whole-batch prefill, chunked when prefill_chunk > 0 (§17): the
+        # batch is length-uniform, so every row advances through the
+        # same [start, end) spans; with one chunk the loop body is the
+        # original single-shot launch verbatim. Each chunk's KV scatters
+        # into the pages before its queries read back through the block
+        # table, so tokens are bit-exact vs the single shot, while a
+        # windowed group's transient allocation caps at window + chunk.
+        chunk = pc.prefill_chunk or t
         zeros = jnp.zeros((b,), jnp.int32)
-        plans, perms = self._bucket_args(pc, np.full((b,), t))
-        if tel is not None:
-            tel.account_paged_launch(
-                "prefill", plans, b, pc, eff_lengths=np.full((b,), t),
-                strategy=self.sc.bucket_strategy,
-                kernel_impl=self.sc.kernel_impl,
-            )
-        if pc.quantized:
-            (logits, pc.k_pages, pc.v_pages,
-             pc.k_scales, pc.v_scales) = self._prefill_paged(
-                self.params, toks, pc.k_pages, pc.v_pages,
-                pc.k_scales, pc.v_scales,
-                pc.device_block_tables(), pc.device_block_starts(),
-                zeros, zeros + t,
-                jnp.asarray(t - 1, jnp.int32), perms, plans=plans,
-            )
-        else:
-            logits, pc.k_pages, pc.v_pages = self._prefill_paged(
-                self.params, toks, pc.k_pages, pc.v_pages,
-                pc.device_block_tables(), pc.device_block_starts(),
-                zeros, zeros + t,
-                jnp.asarray(t - 1, jnp.int32), perms, plans=plans,
-            )
-        pc.lengths[:] = t
+        logits = None
+        start = 0
+        while start < t:
+            end = min(start + chunk, t)
+            n = end - start
+            pad = -(-n // bs) * bs
+            for i in range(b):
+                # retire window-dead blocks, grow capacity for the chunk
+                pc.begin_append(i, start, n)
+            toks = jnp.pad(prompts[:, start:end], ((0, 0), (0, pad - n)))
+            eff = np.full((b,), end)
+            plans, perms = self._bucket_args(pc, eff)
+            if tel is not None:
+                tel.account_paged_launch(
+                    "prefill", plans, b, pc, eff_lengths=eff,
+                    strategy=self.sc.bucket_strategy,
+                    kernel_impl=self.sc.kernel_impl,
+                )
+            if pc.quantized:
+                (logits, pc.k_pages, pc.v_pages,
+                 pc.k_scales, pc.v_scales) = self._prefill_paged(
+                    self.params, toks, pc.k_pages, pc.v_pages,
+                    pc.k_scales, pc.v_scales,
+                    pc.device_block_tables(), pc.device_block_starts(),
+                    zeros + start, zeros + end,
+                    jnp.asarray(n - 1, jnp.int32), perms, plans=plans,
+                )
+            else:
+                logits, pc.k_pages, pc.v_pages = self._prefill_paged(
+                    self.params, toks, pc.k_pages, pc.v_pages,
+                    pc.device_block_tables(), pc.device_block_starts(),
+                    zeros + start, zeros + end,
+                    jnp.asarray(n - 1, jnp.int32), perms, plans=plans,
+                )
+            pc.lengths[:] = end
+            if tel is not None:
+                for uid in uids:
+                    tel.on_prefill(uid, pad)
+            start = end
         out = []
         done = np.zeros((b,), bool)
         tok = self._sample(logits[:, -1], rng)
         if tel is not None:
             for uid in uids:
-                tel.on_prefill(uid, pad)
                 tel.on_first_token(uid)
         for it in range(self.sc.max_new_tokens):
             tok = self._pad_done(tok, done)

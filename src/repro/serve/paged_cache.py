@@ -79,7 +79,8 @@ class LayerPagePool:
 
     def __init__(self, gid: int, layers: Sequence[int],
                  window: Optional[int], n_slots: int, mb: int,
-                 n_blocks: int, block_size: int, retire: bool):
+                 n_blocks: int, block_size: int, retire: bool,
+                 live_bound: Optional[int] = None):
         self.gid = gid
         self.layers = tuple(layers)
         self.window = window
@@ -87,6 +88,12 @@ class LayerPagePool:
         self.block_size = block_size
         self.max_blocks_per_slot = mb
         self.n_blocks = n_blocks
+        #: retirement-aware admission (DESIGN.md §17): max net pool draws
+        #: a slot can hold live at once — `ceil(window/bs) + slack` —
+        #: sound only when every append spans at most the promised
+        #: prefill chunk, so the parent only sets it when chunking is on
+        #: and this group retires. None = reserve the worst case.
+        self.live_bound = live_bound
         self.block_table = np.full((n_slots, mb), SCRATCH_PAGE, np.int32)
         #: leading blocks of each slot that are dead (retired or skipped
         #: at attach): their columns are scratch, the kernels start the
@@ -108,6 +115,10 @@ class LayerPagePool:
         self.pages_allocated = 0
         self.cow_events = 0
         self.pages_retired = 0
+        #: high-water mark of simultaneously-allocated pages, updated at
+        #: draw time — per-tick sampling would miss the single-shot
+        #: prefill transient that retires within the same tick (§17)
+        self.peak_allocated = 0
 
     # -- small accessors ---------------------------------------------------
 
@@ -145,21 +156,25 @@ class LayerPagePool:
         self._ref[b] = 1
         self._drawn[slot] += 1
         self.pages_allocated += 1
+        if len(self._ref) > self.peak_allocated:
+            self.peak_allocated = len(self._ref)
         return b
 
     def retain(self, page: int) -> None:
         assert page in self._ref, (self.gid, page)
         self._ref[page] += 1
 
-    def release(self, page: int) -> None:
+    def release(self, page: int) -> bool:
         """Drop one reference; recycle at zero (LIFO — just-released
-        pages are the likeliest to still be resident in a cache tier)."""
+        pages are the likeliest to still be resident in a cache tier).
+        Returns True when the page actually returned to the free list."""
         r = self._ref[page] - 1
         if r:
             self._ref[page] = r
-        else:
-            del self._ref[page]
-            self.free_blocks.appendleft(page)
+            return False
+        del self._ref[page]
+        self.free_blocks.appendleft(page)
+        return True
 
     def dead_blocks(self, q_min: int) -> int:
         """Blocks fully behind every remaining query's window: block j is
@@ -170,18 +185,36 @@ class LayerPagePool:
             return 0
         return max(0, (q_min - self.retire_window + 1) // self.block_size)
 
+    def first_live_block(self, q_min: int) -> int:
+        """Index of the first block a kernel walk must visit when the
+        earliest remaining query sits at `q_min` — the retired (dead)
+        leading block count. The benchmarks derive their windowed-stack
+        byte denominators from this instead of re-deriving the window
+        arithmetic by hand (DESIGN.md §17)."""
+        return self.dead_blocks(q_min)
+
     def retire(self, slot: int, q_min: int) -> int:
         """Window-aware page retirement (DESIGN.md §12): release every
         live block that fell fully behind the window of the earliest
         remaining query (`q_min`); the column falls back to scratch and
-        the walk start advances past it. Returns pages released."""
+        the walk start advances past it. Returns pages released.
+
+        Retirement-aware admission (§17): a recycled page draws down the
+        slot's reservation ledger — the freed block and the restored
+        entitlement cancel, so `available_blocks()` is unchanged and a
+        live-bounded reservation keeps covering the slot's future draws
+        as its live window slides forward. `_drawn` may go negative when
+        a slot retires attached (never-drawn) pages; that only widens
+        the slot's remaining entitlement by pages it physically returned,
+        so the ledger stays conservative."""
         owned = self._owned[slot]
         target = min(self.dead_blocks(q_min), len(owned))
         released = 0
         for j in range(int(self.first_block[slot]), target):
             page = owned[j]
             if page is not None:
-                self.release(page)
+                if self.release(page) and slot in self._reserved:
+                    self._drawn[slot] -= 1
                 owned[j] = None
                 self.block_table[slot, j] = SCRATCH_PAGE
                 self.pages_retired += 1
@@ -304,6 +337,15 @@ class LayerPagePool:
             assert p in self._ref, (self.gid, p)
         assert self.available_blocks() >= 0, \
             f"group {self.gid}: over-committed reservations"
+        # the §17 ledger invariant: a reserved slot's net draws (draws
+        # minus retirement drawdowns) never exceed its promise — a
+        # violation means admission under-reserved and a later append
+        # may hit MemoryError mid-flight
+        for s, r in self._reserved.items():
+            assert self._drawn[s] <= r, (
+                f"group {self.gid}: slot {s} drew {self._drawn[s]} "
+                f"net pages against a reservation of {r}"
+            )
 
 
 class PagedKVCache:
@@ -316,6 +358,9 @@ class PagedKVCache:
         n_blocks: int = 0,
         window_retirement: bool = True,
         kv_dtype: str = "bf16",
+        prefill_chunk: int = 0,
+        group_pool_slack: Optional[int] = None,
+        group_blocks=None,
     ):
         """`max_len`: max tokens (prompt + generated) any slot may hold.
         `n_blocks=0` sizes each group's pool for full occupancy: scratch
@@ -329,7 +374,28 @@ class PagedKVCache:
         f32 scale stacks (`k_scales`/`v_scales`, [L, n_blocks, KV])
         managed alongside the pools — COW copies a page's scale rows
         with its KV rows, and the host suffix writer quantizes on
-        append through `kernels.paged_common.requantize_page_update`."""
+        append through `kernels.paged_common.requantize_page_update`.
+
+        Long-context trio (DESIGN.md §17). `prefill_chunk > 0` is the
+        caller's promise that no single append spans more than that
+        many tokens (the scheduler's chunked prefill; rounded up to a
+        block multiple). Under that promise every retiring group's net
+        live draws per slot are bounded by
+        `ceil(window/bs) + group_pool_slack` (the slack defaults to
+        `chunk_blocks + 1`, the exact worst case over block
+        alignments), so `reserve_slot` caps its promise at that bound
+        instead of `ceil(total/bs)` and retirement draws the ledger
+        back down. `group_blocks` sizes pools per group: None keeps the
+        uniform `n_blocks` everywhere, "auto" sizes each retiring
+        windowed group at `1 + n_slots * live_bound` (requires
+        `prefill_chunk > 0` — a single-shot long prefill would
+        transiently overflow the shrunk pool), and a `{gid: n_blocks}`
+        dict pins explicit per-group sizes. The stacked device arrays
+        are still allocated at the LARGEST group's size (per-group
+        physical arrays are the §17 follow-on); the per-group
+        bookkeeping already refuses to draw past each group's own
+        budget, which is what admission and the benches measure via
+        `provisioned_page_bytes`."""
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if max_len < 1:
@@ -338,23 +404,77 @@ class PagedKVCache:
         self.n_slots = n_slots
         self.block_size = block_size
         self.max_blocks_per_slot = -(-max_len // block_size)
-        self.n_blocks = n_blocks or 1 + n_slots * self.max_blocks_per_slot
-        if self.n_blocks < 1 + self.max_blocks_per_slot:
+        if prefill_chunk < 0:
             raise ValueError(
-                f"n_blocks={self.n_blocks} cannot hold even one slot "
-                f"({self.max_blocks_per_slot} blocks + scratch)"
+                f"prefill_chunk must be >= 0, got {prefill_chunk}"
             )
+        #: max tokens one append may span (0 = unbounded, block-rounded)
+        self.prefill_chunk = (
+            -(-prefill_chunk // block_size) * block_size
+            if prefill_chunk else 0
+        )
+        chunk_blocks = self.prefill_chunk // block_size if \
+            self.prefill_chunk else 1
+        if group_pool_slack is None:
+            # a span of c*bs tokens can straddle c+1 blocks, and the
+            # just-retired boundary block may still be partially live:
+            # ceil(W/bs) + chunk_blocks + 1 is the exact worst case
+            group_pool_slack = chunk_blocks + 1
+        if group_pool_slack < 1:
+            raise ValueError(
+                f"group_pool_slack must be >= 1, got {group_pool_slack}"
+            )
+        self.group_pool_slack = int(group_pool_slack)
+        uniform = n_blocks or 1 + n_slots * self.max_blocks_per_slot
+        if uniform < 2:
+            raise ValueError(
+                f"n_blocks={uniform} leaves no page beyond scratch"
+            )
+        # NOTE: an explicit n_blocks below one slot's worst case
+        # (1 + max_blocks_per_slot) is legal since §17: admission
+        # reserves before any draw, so an over-large request is refused
+        # with the per-group deficit diagnostic instead of hitting
+        # MemoryError mid-flight — and under chunked prefill the
+        # live-bounded promise may still fit where the worst case
+        # cannot, which is the whole point of retirement-aware sizing.
         self.window_retirement = window_retirement
         capacity = self.max_blocks_per_slot * block_size
-        self.pools = [
-            LayerPagePool(
+        groups = layer_attn_groups(cfg, capacity)
+        if group_blocks == "auto" and not self.prefill_chunk:
+            raise ValueError(
+                "group_blocks='auto' requires prefill_chunk > 0: "
+                "without chunked appends a long prefill transiently "
+                "allocates its full windowed table and overflows a "
+                "live-bound-sized pool"
+            )
+
+        def _live_bound(window: Optional[int]) -> Optional[int]:
+            if (window is None or not window_retirement
+                    or not self.prefill_chunk):
+                return None
+            return min(
+                self.max_blocks_per_slot,
+                -(-window // block_size) + self.group_pool_slack,
+            )
+
+        def _pool_blocks(gid: int, bound: Optional[int]) -> int:
+            if isinstance(group_blocks, dict):
+                return int(group_blocks.get(gid, uniform))
+            if group_blocks == "auto" and bound is not None:
+                return min(uniform, 1 + n_slots * bound)
+            return uniform
+
+        self.pools = []
+        for gid, (window, layers) in enumerate(groups):
+            bound = _live_bound(window)
+            self.pools.append(LayerPagePool(
                 gid, layers, window, n_slots, self.max_blocks_per_slot,
-                self.n_blocks, block_size, retire=window_retirement,
-            )
-            for gid, (window, layers) in enumerate(
-                layer_attn_groups(cfg, capacity)
-            )
-        ]
+                _pool_blocks(gid, bound), block_size,
+                retire=window_retirement, live_bound=bound,
+            ))
+        #: physical page rows in the stacked device arrays (= the
+        #: largest group's id space; smaller groups use a prefix of it)
+        self.n_blocks = max(p.n_blocks for p in self.pools)
         if kv_dtype not in ("bf16", "int8"):
             raise ValueError(
                 f"kv_dtype must be 'bf16' or 'int8', got {kv_dtype!r}"
@@ -457,18 +577,30 @@ class PagedKVCache:
         return min(p.available_blocks() for p in self.pools)
 
     def can_fit(self, n_tokens: int) -> bool:
-        need = self._blocks_for(n_tokens)
-        return all(p.available_blocks() >= need for p in self.pools)
+        return all(
+            p.available_blocks() >= self.draws_for(
+                n_tokens, live_bound=p.live_bound
+            )
+            for p in self.pools
+        )
 
     def draws_for(self, n_tokens: int, n_shared: int = 0,
-                  n_cow: int = 0) -> int:
+                  n_cow: int = 0,
+                  live_bound: Optional[int] = None) -> int:
         """Pool draws a slot needs in ONE group for `n_tokens` positions
         when `n_shared` of its blocks arrive dead-or-attached and up to
         `n_cow` attached pages may be copy-on-written — the single home
         of the admission draw formula. (Dead window-skipped blocks cost
         no draw, exactly like attached ones, so callers fold both into
-        `n_shared`.)"""
-        return self._blocks_for(n_tokens) - n_shared + n_cow
+        `n_shared`.) `live_bound` is the group's retirement-aware cap
+        (DESIGN.md §17): with chunked appends the slot's NET draws never
+        exceed it — retirement recycles a page for (almost) every new
+        one — so the reservation promises `min(worst_case, live_bound)`
+        instead of the full `ceil(total/bs)`."""
+        base = self._blocks_for(n_tokens) - n_shared
+        if live_bound is not None:
+            base = min(base, live_bound)
+        return max(base, 0) + n_cow
 
     def _group_counts(self, value) -> Dict[int, int]:
         if isinstance(value, dict):
@@ -492,7 +624,8 @@ class PagedKVCache:
         shared = self._group_counts(n_shared)
         cow = self._group_counts(n_cow)
         draws = {
-            p.gid: self.draws_for(n_tokens, shared[p.gid], cow[p.gid])
+            p.gid: self.draws_for(n_tokens, shared[p.gid], cow[p.gid],
+                                  live_bound=p.live_bound)
             for p in self.pools
         }
         if any(
@@ -512,7 +645,8 @@ class PagedKVCache:
         cow = self._group_counts(n_cow)
         out = {}
         for p in self.pools:
-            d = self.draws_for(n_tokens, shared[p.gid], cow[p.gid])
+            d = self.draws_for(n_tokens, shared[p.gid], cow[p.gid],
+                               live_bound=p.live_bound)
             short = d - p.available_blocks()
             if short > 0:
                 out[p.gid] = short
@@ -741,7 +875,9 @@ class PagedKVCache:
 
     # -- device views ------------------------------------------------------
 
-    def device_block_tables(self) -> jnp.ndarray:
+    def device_block_tables(
+        self, scratch_slots: Sequence[int] = ()
+    ) -> jnp.ndarray:
         """Each layer's group table: [L, n_slots, max_blocks] int32, or
         the single shared [n_slots, max_blocks] table when the config
         has one attention pattern — the model entry points broadcast a
@@ -749,37 +885,61 @@ class PagedKVCache:
         the pre-§12 bytes per tick instead of L host-built copies.
         Fresh copy either way: this object mutates tables in place, and
         an aliasing device array would race with async-dispatched
-        decodes."""
+        decodes. `scratch_slots` rows are presented all-scratch — the
+        scheduler parks mid-chunked-prefill slots there so the batched
+        decode's unconditional scatter cannot touch their half-written
+        live pages (§17)."""
         if len(self.pools) == 1:
-            return jnp.asarray(np.array(self.pools[0].block_table))
+            full2 = np.array(self.pools[0].block_table)
+            if len(scratch_slots):
+                full2[list(scratch_slots)] = SCRATCH_PAGE
+            return jnp.asarray(full2)
         l = self.k_pages.shape[0]
         full = np.zeros(
             (l, self.n_slots, self.max_blocks_per_slot), np.int32
         )
         for p in self.pools:
             full[list(p.layers)] = p.block_table
+        if len(scratch_slots):
+            full[:, list(scratch_slots)] = SCRATCH_PAGE
         return jnp.asarray(full)
 
-    def device_block_starts(self) -> jnp.ndarray:
+    def device_block_starts(
+        self, scratch_slots: Sequence[int] = ()
+    ) -> jnp.ndarray:
         """Each layer's first live block (the kernels' walk-start /
         bucket-needs input): [L, n_slots] int32, or [n_slots] for a
-        single-group config (broadcast in-graph, like the tables)."""
+        single-group config (broadcast in-graph, like the tables).
+        `scratch_slots` walk from block 0, matching their all-scratch
+        table rows."""
         if len(self.pools) == 1:
-            return jnp.asarray(np.array(self.pools[0].first_block))
+            fb2 = np.array(self.pools[0].first_block)
+            if len(scratch_slots):
+                fb2[list(scratch_slots)] = 0
+            return jnp.asarray(fb2)
         l = self.k_pages.shape[0]
         full = np.zeros((l, self.n_slots), np.int32)
         for p in self.pools:
             full[list(p.layers)] = p.first_block
+        if len(scratch_slots):
+            full[:, list(scratch_slots)] = 0
         return jnp.asarray(full)
 
-    def device_positions(self) -> jnp.ndarray:
-        """Per-slot write index for the next decode step (= length)."""
-        return jnp.asarray(np.array(self.lengths))
+    def device_positions(
+        self, scratch_slots: Sequence[int] = ()
+    ) -> jnp.ndarray:
+        """Per-slot write index for the next decode step (= length);
+        `scratch_slots` present position 0, exactly an idle slot."""
+        pos = np.array(self.lengths)
+        if len(scratch_slots):
+            pos[list(scratch_slots)] = 0
+        return jnp.asarray(pos)
 
     def slot_occupancy(self) -> float:
-        """Fraction of non-scratch pages allocated, worst group."""
+        """Fraction of non-scratch pages allocated, worst group — each
+        group against ITS OWN pool size (per-group sizing, §17)."""
         return max(
-            1.0 - p.n_free / max(self.n_blocks - 1, 1)
+            1.0 - p.n_free / max(p.n_blocks - 1, 1)
             for p in self.pools
         )
 
@@ -858,6 +1018,30 @@ class PagedKVCache:
         plb = self.page_layer_bytes
         return sum(
             len(p.layers) * p.allocated_pages() * plb for p in self.pools
+        )
+
+    def peak_resident_page_bytes(self) -> int:
+        """High-water mark of `resident_page_bytes` over the cache's
+        lifetime, maintained at page-draw time — it therefore catches
+        intra-tick transients (a single-shot long prefill allocates its
+        full windowed table and retires most of it within the SAME tick)
+        that any per-tick sampler would miss. The §17 long-prompt bench
+        asserts chunked prefill reduces this on windowed stacks."""
+        plb = self.page_layer_bytes
+        return sum(
+            len(p.layers) * p.peak_allocated * plb for p in self.pools
+        )
+
+    def provisioned_page_bytes(self) -> int:
+        """Bytes of KV capacity PROVISIONED (pool budget, not current
+        residency): each group's non-scratch page budget times its layer
+        rows. Per-group sizing (§17) is measured here — a windowed group
+        sized at `n_slots * live_bound` provisions `live_bound /
+        max_blocks_per_slot` of the uniform budget for 5/6 of a
+        gemma3-27b stack's layers."""
+        plb = self.page_layer_bytes
+        return sum(
+            len(p.layers) * (p.n_blocks - 1) * plb for p in self.pools
         )
 
     def lockstep_equiv_page_bytes(self) -> int:

@@ -128,6 +128,9 @@ class ContinuousBatcher:
         prefix_max_retained_fraction: float = 1.0,
         window_retirement: bool = True,
         kv_dtype: str = "bf16",
+        prefill_chunk: int = 0,
+        group_pool_slack: Optional[int] = None,
+        group_blocks=None,
         telemetry: Optional[ServeTelemetry] = None,
     ):
         self.cfg = cfg
@@ -167,6 +170,12 @@ class ContinuousBatcher:
             raise ValueError("prefix sharing requires paged=True")
         if kv_dtype != "bf16" and not paged:
             raise ValueError("kv_dtype='int8' requires paged=True")
+        if (prefill_chunk or group_blocks is not None) and not paged:
+            raise ValueError(
+                "prefill_chunk / group_blocks require paged=True "
+                "(chunked prefill and per-group sizing are page-pool "
+                "machinery, DESIGN.md §17)"
+            )
         #: KV pool storage dtype (DESIGN.md §16): "int8" threads the
         #: per-page scale stacks through every compiled step below
         self.kv_dtype = kv_dtype
@@ -185,7 +194,9 @@ class ContinuousBatcher:
             self.pcache = PagedKVCache(
                 cfg, n_slots, max_len=cache_len, block_size=block_size,
                 n_blocks=n_blocks, window_retirement=window_retirement,
-                kv_dtype=kv_dtype,
+                kv_dtype=kv_dtype, prefill_chunk=prefill_chunk,
+                group_pool_slack=group_pool_slack,
+                group_blocks=group_blocks,
             )
             self.cache = None
             self._decode_paged = jit_paged_decode(
@@ -199,6 +210,11 @@ class ContinuousBatcher:
                 cfg, impl=kernel_impl, annotate=annotate, watcher=watcher,
                 kv_dtype=kv_dtype,
             )
+            #: chunked prefill (DESIGN.md §17): a prompt whose uncached
+            #: suffix exceeds this many tokens prefills in block-multiple
+            #: chunks, ONE chunk per tick, interleaved with decode — the
+            #: cache already block-rounded the value. 0 = single-shot.
+            self.prefill_chunk = self.pcache.prefill_chunk
         else:
             self.pcache = None
             self.cache = init_cache(cfg, n_slots, cache_len)
@@ -208,6 +224,11 @@ class ContinuousBatcher:
             self._prefill_dense = jit_dense_prefill(
                 cfg, cache_len, annotate=annotate, watcher=watcher
             )
+            self.prefill_chunk = 0
+        #: slot -> next un-prefilled prompt position of an in-flight
+        #: chunked prefill; such a slot is queue-busy but parked out of
+        #: the decode active set until its final chunk lands
+        self._chunk_pos: Dict[int, int] = {}
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -327,24 +348,57 @@ class ContinuousBatcher:
         (per layer group — a windowed group maps only the blocks its
         window still reaches), COW/grow for the suffix window, run the
         jitted paged prefill on the uncached tokens, then publish the
-        completed full-page blocks back to the index."""
+        completed full-page blocks back to the index.
+
+        Chunked prefill (DESIGN.md §17): when the uncached suffix
+        exceeds `prefill_chunk`, only the FIRST chunk runs now — the
+        rest advance one chunk per tick (`_advance_chunked`),
+        interleaved with the decode batch, so a long prompt's windowed
+        groups never hold more than window + chunk live tokens and the
+        other slots keep decoding. Tokens are bit-exact vs single-shot:
+        every chunk scatters its KV into the pages BEFORE the kernel
+        reads back through the block table, so each query row folds the
+        same stored bytes either way."""
         pc = self.pcache
         t = int(req.prompt.shape[0])
-        bs = pc.block_size
         if self.telemetry is not None:
             self.telemetry.on_admit(req.uid, i, n_cached)
         if attach_plan is not None:
             pc.attach_chain(i, attach_plan)
-        ns = t - n_cached
-        pad = -(-ns // bs) * bs
-        # host-side page prep BEFORE the device table snapshot: capacity
-        # for the full prompt, COW of any shared page the scatter touches
-        pc.begin_append(i, n_cached, ns)
-        toks = jnp.pad(req.prompt[n_cached:], (0, pad - ns))[None, :]
-        # bucket the one-slot launch by the prompt's LIVE page occupancy
+        if self.prefix is not None:
+            self.prefix.lookups += 1
+            self.prefix.hits += bool(n_cached)
+            self.prefix.cached_tokens_served += n_cached
+        if self.prefill_chunk and t - n_cached > self.prefill_chunk:
+            end = n_cached + self.prefill_chunk
+            self._launch_prefill_chunk(i, req, n_cached, end)
+            self._chunk_pos[i] = end
+            self.slots[i] = req       # queue-busy, parked out of decode
+            return
+        logits = self._launch_prefill_chunk(i, req, n_cached, t)
+        self._finish_prefill(i, req, logits)
+
+    def _launch_prefill_chunk(self, i: int, req: Request,
+                              start: int, end: int):
+        """One jitted prefill launch over prompt positions [start, end)
+        of slot `i` — the single-shot path is just one chunk spanning
+        the whole uncached suffix. The launch width pads to a block
+        multiple, so the compile set stays bounded by the §11 pow2 plan
+        machinery: mid chunks are always exactly `prefill_chunk` wide
+        and only the tail chunk is ragged."""
+        pc = self.pcache
+        bs = pc.block_size
+        n = end - start
+        pad = -(-n // bs) * bs
+        # host-side page prep BEFORE the device table snapshot: retire
+        # blocks behind the chunk's window, grow capacity for the chunk,
+        # COW any shared page the scatter touches
+        pc.begin_append(i, start, n)
+        toks = jnp.pad(req.prompt[start:end], (0, pad - n))[None, :]
+        # bucket the one-slot launch by the slot's LIVE page occupancy
         # per layer group so the prefill walk stops at the bucket bound
         # instead of streaming the slot's whole max_blocks-deep table
-        plans, perms = self._bucket_args([t], slots=[i])
+        plans, perms = self._bucket_args([end], slots=[i])
         bt, st = pc.device_block_tables(), pc.device_block_starts()
         if bt.ndim == 2:                 # single group: [B, mb] / [B]
             bt, st = bt[i: i + 1], st[i: i + 1]
@@ -355,33 +409,62 @@ class ContinuousBatcher:
              pc.k_scales, pc.v_scales) = self._prefill_paged(
                 self.params, toks, pc.k_pages, pc.v_pages,
                 pc.k_scales, pc.v_scales, bt, st,
-                jnp.asarray([n_cached], jnp.int32),
-                jnp.asarray([t], jnp.int32),
-                jnp.asarray(ns - 1, jnp.int32), perms, plans=plans,
+                jnp.asarray([start], jnp.int32),
+                jnp.asarray([end], jnp.int32),
+                jnp.asarray(n - 1, jnp.int32), perms, plans=plans,
             )
         else:
             logits, pc.k_pages, pc.v_pages = self._prefill_paged(
                 self.params, toks, pc.k_pages, pc.v_pages, bt, st,
-                jnp.asarray([n_cached], jnp.int32), jnp.asarray([t], jnp.int32),
-                jnp.asarray(ns - 1, jnp.int32), perms, plans=plans,
+                jnp.asarray([start], jnp.int32), jnp.asarray([end], jnp.int32),
+                jnp.asarray(n - 1, jnp.int32), perms, plans=plans,
             )
-        pc.lengths[i] = t
+        pc.lengths[i] = end
         self.prefill_tokens += pad
         if self.telemetry is not None:
             self.telemetry.on_prefill(req.uid, pad)
             # one-slot launch: n_rows=1 (the table snapshot was sliced);
-            # geometry inputs let the perf model re-predict the launch
+            # geometry inputs let the perf model re-predict the launch —
+            # per-chunk accounting right after the chunk's begin_append
+            # reads the same live pool state the plan was built from, so
+            # the §14 predicted-vs-measured gate stays at exactly 0
             self.telemetry.account_paged_launch(
-                "prefill", plans, 1, pc, eff_lengths=[t], slots=[i],
+                "prefill", plans, 1, pc, eff_lengths=[end], slots=[i],
                 strategy=self.bucket_strategy,
                 kernel_impl=self._kernel_impl,
             )
+        return logits
+
+    def _finish_prefill(self, i: int, req: Request, logits):
+        """Post-prefill bookkeeping once the FULL prompt's KV is in the
+        pages: publish completed blocks to the prefix index, then start
+        (or immediately finish) the slot from the prefill logits."""
         if self.prefix is not None:
-            self.prefix.lookups += 1
-            self.prefix.hits += bool(n_cached)
-            self.prefix.cached_tokens_served += n_cached
-            self.prefix.publish(req.prompt, pc, i, keys=req.block_keys)
+            self.prefix.publish(req.prompt, self.pcache, i,
+                                keys=req.block_keys)
         self._start_slot(i, req, logits)
+
+    def _advance_chunked(self) -> int:
+        """Advance every in-flight chunked prefill by ONE chunk; a slot
+        whose final chunk lands gets its first token this tick (and may
+        decode this very tick, matching the single-shot path's
+        prefill-then-decode tick shape). Returns slots advanced — chunk
+        progress counts for the drain loop's liveness check."""
+        advanced = 0
+        for i in sorted(self._chunk_pos):
+            req = self.slots[i]
+            pos = self._chunk_pos[i]
+            t = int(req.prompt.shape[0])
+            end = min(pos + self.prefill_chunk, t)
+            logits = self._launch_prefill_chunk(i, req, pos, end)
+            advanced += 1
+            if end >= t:
+                del self._chunk_pos[i]
+                self.slots[i] = None  # _finish_prefill re-seats or ends
+                self._finish_prefill(i, req, logits)
+            else:
+                self._chunk_pos[i] = end
+        return advanced
 
     def _hit_eos(self, tok: int) -> bool:
         return self.eos_token >= 0 and tok == self.eos_token
@@ -408,19 +491,27 @@ class ContinuousBatcher:
     # -- decode ------------------------------------------------------------
 
     def step(self) -> int:
-        """One scheduler tick: fill free slots, decode once. Returns the
-        number of active slots advanced."""
+        """One scheduler tick: advance in-flight chunked prefills one
+        chunk each, fill free slots, decode once. Returns the number of
+        slots advanced (decode + chunk progress — both count for the
+        drain loop's liveness check)."""
         n_finished = len(self.finished)
+        # chunks first: a finishing final chunk may free its slot (done
+        # at prefill) for this very tick's admission pass below
+        chunked = self._advance_chunked() if self._chunk_pos else 0
         self._fill_slots()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = [
+            i for i, s in enumerate(self.slots)
+            if s is not None and i not in self._chunk_pos
+        ]
         if not active:
-            if len(self.finished) > n_finished:
-                # prefill-only tick: every admitted request completed AT
-                # prefill (same-slot retry) — real work, count the tick
+            if chunked or len(self.finished) > n_finished:
+                # prefill-only tick: chunk progress, or every admitted
+                # request completed AT prefill — real work, count it
                 self.ticks += 1
             if self.telemetry is not None:
                 self._sample_tick()
-            return 0
+            return chunked
         if self.paged:
             nxt = self._step_paged(active)
         else:
@@ -445,7 +536,7 @@ class ContinuousBatcher:
         self.ticks += 1
         if self.telemetry is not None:
             self._sample_tick()
-        return len(active)
+        return len(active) + chunked
 
     def _sample_tick(self):
         """End-of-tick gauge sample (telemetry attached only): queue
@@ -486,28 +577,39 @@ class ContinuousBatcher:
             # the jitted scatter
             pc.begin_append(i, int(pc.lengths[i]), 1)
         # this decode attends over position + 1 kv rows per slot (idle
-        # slots: 1 scratch row) — bucket the batch by that occupancy
-        plans, perms = self._bucket_args(pc.lengths + 1)
+        # slots: 1 scratch row) — bucket the batch by that occupancy.
+        # Mid-prefill (chunked) slots ride the batched decode like idle
+        # slots: a scratch table row parks their unconditional KV
+        # scatter in scratch page 0 — never in their half-written live
+        # pages — and occupancy 1 keeps their dead weight out of the
+        # launch's streamed bytes (§17)
+        eff = pc.lengths + 1
+        parked = sorted(self._chunk_pos)
+        if parked:
+            eff = np.array(eff)
+            eff[parked] = 1
+        plans, perms = self._bucket_args(eff)
         if self.telemetry is not None:
             self.telemetry.account_paged_launch(
                 "decode", plans, self.n_slots, pc,
-                eff_lengths=pc.lengths + 1,
+                eff_lengths=eff,
                 strategy=self.bucket_strategy,
                 kernel_impl=self._kernel_impl,
             )
+        bt = pc.device_block_tables(scratch_slots=parked)
+        st = pc.device_block_starts(scratch_slots=parked)
+        pos = pc.device_positions(scratch_slots=parked)
         if pc.quantized:
             (logits, pc.k_pages, pc.v_pages,
              pc.k_scales, pc.v_scales) = self._decode_paged(
                 self.params, self.tokens, pc.k_pages, pc.v_pages,
                 pc.k_scales, pc.v_scales,
-                pc.device_block_tables(), pc.device_block_starts(),
-                pc.device_positions(), perms, plans=plans,
+                bt, st, pos, perms, plans=plans,
             )
         else:
             logits, pc.k_pages, pc.v_pages = self._decode_paged(
                 self.params, self.tokens, pc.k_pages, pc.v_pages,
-                pc.device_block_tables(), pc.device_block_starts(),
-                pc.device_positions(), perms, plans=plans,
+                bt, st, pos, perms, plans=plans,
             )
         for i in active:
             pc.lengths[i] += 1
@@ -517,18 +619,40 @@ class ContinuousBatcher:
         """Per-layer-group pool state for the deadlock diagnostic — with
         layer-major pools a single global free count is meaningless: one
         starved group (usually the global layers) blocks admission while
-        the windowed groups sit half empty."""
+        the windowed groups sit half empty. Reports each group's
+        free-vs-promised draw ledger (free pages against each group's
+        OWN pool size, reservations outstanding after retirement
+        drawdown) and the head-of-queue request's per-group draw
+        deficit, so a pool-sizing failure is diagnosable straight from
+        the raised message (§17). The head-of-queue deficit is the
+        no-prefix worst case — an actual admission pass may shrink it
+        via prefix attach or index eviction."""
         if self.pcache is None:
             return ""
         pc = self.pcache
         per_group = ", ".join(
             f"g{p.gid}[{'global' if p.window is None else f'w={p.window}'}"
-            f"×{len(p.layers)}L]: {p.n_free}/{pc.n_blocks - 1} free, "
-            f"{p.available_blocks()} unreserved"
+            f"×{len(p.layers)}L]: {p.n_free}/{p.n_blocks - 1} free, "
+            f"{p.available_blocks()} unreserved, "
+            f"{sum(r - p._drawn[s] for s, r in p._reserved.items())}"
+            f" draws promised"
             for p in pc.pools
         )
+        head = ""
+        if self.queue:
+            req = self.queue[0]
+            t = int(req.prompt.shape[0])
+            total = t + max(req.max_new_tokens - 1, 0)
+            deficits = pc.reserve_deficits(total)
+            short = ", ".join(
+                f"g{g}:-{d}" for g, d in sorted(deficits.items())
+            ) or "none"
+            head = (
+                f"; head-of-queue uid={req.uid} needs {total} tokens"
+                f" ({t} prompt), per-group draw deficit: {short}"
+            )
         return (
-            f"; pools: {per_group}; "
+            f"; pools: {per_group}{head}; "
             f"occupancy={pc.slot_occupancy():.2f}"
         )
 
